@@ -1,0 +1,95 @@
+"""Shared benchmark scaffolding: proxy-scale experiment arena + CSV emission.
+
+All paper-table benchmarks share one deterministic Markov-LM arena per model
+family so "Saving (FLOPs)" is computed against the same from-scratch reference
+exactly as the paper does (target = baseline's final quality; saving =
+1 - FLOPs_method/FLOPs_baseline at that quality).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.config import ModelConfig, MultiLevelConfig, TrainConfig
+from repro.core.vcycle import History, run_scratch, saving_vs_baseline
+from repro.data import MarkovLM, lm_batch, masked_lm_batch, vision_batch
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def save_json(name: str, payload) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def proxy_tc(quick: bool = False, **kw) -> TrainConfig:
+    base = dict(steps=90 if quick else 150, warmup_steps=8, peak_lr=3e-3,
+                batch_size=8, seq_len=24, log_every=3)
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def batch_fn_for(cfg: ModelConfig, tc: TrainConfig) -> Callable[[int], Dict]:
+    if cfg.family == "vit":
+        from repro.models.vit import n_patches, patch_dim
+
+        return lambda step: vision_batch(tc.seed, step, tc.batch_size, n_patches(cfg),
+                                         patch_dim(cfg), cfg.n_classes)
+    chain = MarkovLM(cfg.vocab_size)
+    if cfg.family == "encoder":
+        return lambda step: masked_lm_batch(chain, tc.seed, step, tc.batch_size,
+                                            tc.seq_len, mask_id=cfg.vocab_size - 1)
+    return lambda step: lm_batch(chain, tc.seed, step, tc.batch_size, tc.seq_len)
+
+
+class Arena:
+    """One model family's benchmark arena with a cached scratch baseline."""
+
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig):
+        self.cfg = cfg
+        self.tc = tc
+        self.batch_fn = batch_fn_for(cfg, tc)
+        self._base: Optional[History] = None
+        self._step_us: float = 0.0
+
+    @property
+    def baseline(self) -> History:
+        if self._base is None:
+            t0 = time.time()
+            _, self._base = run_scratch(self.cfg, self.tc, self.batch_fn, seed=0)
+            self._step_us = (time.time() - t0) / self.tc.steps * 1e6
+        return self._base
+
+    @property
+    def target(self) -> float:
+        return float(self.baseline.smoothed(5)[1][-1])
+
+    @property
+    def step_us(self) -> float:
+        self.baseline
+        return self._step_us
+
+    def saving(self, hist: History) -> Dict[str, float]:
+        return saving_vs_baseline(self.baseline, hist)
+
+
+def time_call(fn, *args, reps: int = 5, **kw) -> float:
+    """Wall-time per call in microseconds (after one warmup)."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6

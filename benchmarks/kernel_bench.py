@@ -1,0 +1,40 @@
+"""Kernel micro-benchmarks: correctness (max|err| vs oracle) + wall time of
+the pure-jnp oracle path on this host (the Pallas kernel itself targets TPU;
+interpret-mode timing is not meaningful and is reported only as a check)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.kernels import ops, ref
+
+
+def bench_kernels(quick: bool = False) -> None:
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    shapes = [(1, 4, 256, 64)] if quick else [(1, 4, 256, 64), (2, 8, 512, 64)]
+    for (B, H, S, D) in shapes:
+        q = jax.random.normal(ks[0], (B, H, S, D), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (B, H, S, D), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (B, H, S, D), jnp.bfloat16)
+        fn = jax.jit(lambda q, k, v: ref.naive_attention(q, k, v, causal=True))
+        us = time_call(fn, q, k, v, reps=3)
+        got = ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+        err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                    - fn(q, k, v).astype(jnp.float32))))
+        emit(f"kernels/flash_attention/B{B}H{H}S{S}D{D}", us, f"max_err={err:.2e}")
+
+    w = jax.random.normal(ks[0], (4096, 2048), jnp.float32)
+    fn = jax.jit(lambda w: ref.coalesce_pair_ref(w, axis=0, w0=0.5))
+    us = time_call(fn, w, reps=5)
+    got = ops.coalesce_pair(w, axis=0, w0=0.5)
+    err = float(jnp.max(jnp.abs(got - fn(w))))
+    emit("kernels/coalesce_pair/4096x2048", us, f"max_err={err:.2e}")
+
+    a = jax.random.normal(ks[0], (2048, 2048), jnp.float32)
+    b = jax.random.normal(ks[1], (2048, 2048), jnp.float32)
+    fn = jax.jit(lambda a, b: ref.interp_axpy_ref(a, b, 0.25))
+    us = time_call(fn, a, b, reps=5)
+    err = float(jnp.max(jnp.abs(ops.interp_axpy(a, b, 0.25) - fn(a, b))))
+    emit("kernels/interp_axpy/2048x2048", us, f"max_err={err:.2e}")

@@ -1,0 +1,22 @@
+"""Hillclimb helper: lower+compile selected (arch:shape) pairs on the single-pod
+mesh and print/store their roofline terms (used for the EXPERIMENTS.md SPerf
+iteration log without touching the main dryrun.json).
+
+  PYTHONPATH=src python benchmarks/measure_pairs.py [arch:shape ...]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, json
+from repro.config import SHAPES
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+
+mesh = make_production_mesh()
+cells = sys.argv[1:] or ["jamba-1.5-large-398b:train_4k", "deepseek-v3-671b:decode_32k", "qwen3-14b:train_4k"]
+out = {}
+for c in cells:
+    arch, shape = c.split(":")
+    print(f"== {c} ==", flush=True)
+    rec = lower_cell(arch, SHAPES[shape], mesh)
+    out[c] = rec
+json.dump(out, open("/tmp/pairs_latest.json", "w"), indent=1, default=float)

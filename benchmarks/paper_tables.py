@@ -1,0 +1,173 @@
+"""One benchmark per paper table (proxy scale; see DESIGN.md §8).
+
+Table 1  BERT-Base: ours vs from-scratch vs the 5 baselines (FLOPs saving).
+Table 2  GPT-Base:  ours vs from-scratch (+ growth baselines).
+Table 3  DeiT-B:    ours vs from-scratch on the vision proxy.
+Table 4  BERT-Large proxy: 2-level vs 3-level V-cycle (more levels help).
+Table 5  Ablations: E_a (A), E_small (B), alpha incl. 1.0 (C), coalesced size (D).
+App. F   Removing Coalescing (random small init) hurts.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from benchmarks.common import Arena, emit, proxy_tc, save_json
+from repro.config import MultiLevelConfig
+from repro.configs import paper_models
+from repro.core.baselines import BASELINES
+from repro.core.vcycle import run_vcycle
+
+ML_BERT = MultiLevelConfig(n_levels=2, alpha=0.5, e_a_frac=0.05, e_small_frac=0.5)
+ML_GPT = MultiLevelConfig(n_levels=2, alpha=0.25, e_a_frac=0.05, e_small_frac=0.5)
+
+
+def _clear():
+    import jax
+
+    jax.clear_caches()  # long bench runs accumulate jit dylibs -> LLVM ENOMEM
+
+
+def _run_ours(arena: Arena, ml: MultiLevelConfig, tag: str, results: Dict,
+              final_steps=None) -> None:
+    _clear()
+    t0 = time.time()
+    out = run_vcycle(arena.cfg, ml, arena.tc, arena.batch_fn, seed=0,
+                     target_loss=arena.target, final_steps=final_steps)
+    s = arena.saving(out.history)
+    results[tag] = {**s, "history": out.history.to_dict()}
+    emit(tag, (time.time() - t0) * 1e6 / max(len(out.history.step), 1),
+         f"flops_saving={s['flops_saving']:.3f}@loss{s['target_loss']:.3f}")
+
+
+def bench_table1_bert(quick: bool = False) -> Dict:
+    cfg = paper_models.bert_proxy(d_model=64, n_layers=4)
+    tc = proxy_tc(quick)
+    arena = Arena(cfg, tc)
+    results: Dict = {"scratch": {"target_loss": arena.target,
+                                 "history": arena.baseline.to_dict()}}
+    emit("table1/bert/scratch", arena.step_us, f"final_loss={arena.target:.3f}")
+    _run_ours(arena, ML_BERT, "table1/bert/ours", results)
+    for name, fn in BASELINES.items():
+        _clear()
+        t0 = time.time()
+        kw = dict(small_steps=tc.steps // 2, final_steps=tc.steps,
+                  target_loss=arena.target)
+        if quick and name in ("ligo",):
+            kw["fit_steps"] = 10
+        hist = fn(cfg, ML_BERT, tc, arena.batch_fn, **kw)
+        s = arena.saving(hist)
+        results[name] = {**s, "history": hist.to_dict()}
+        emit(f"table1/bert/{name}", (time.time() - t0) * 1e6 / max(len(hist.step), 1),
+             f"flops_saving={s['flops_saving']:.3f}")
+    save_json("table1_bert", results)
+    return results
+
+
+def bench_table2_gpt(quick: bool = False) -> Dict:
+    cfg = paper_models.gpt_proxy(d_model=64, n_layers=4)
+    tc = proxy_tc(quick)
+    arena = Arena(cfg, tc)
+    results: Dict = {"scratch": {"target_loss": arena.target}}
+    emit("table2/gpt/scratch", arena.step_us, f"final_loss={arena.target:.3f}")
+    _run_ours(arena, ML_GPT, "table2/gpt/ours", results)
+    for name in ("stackbert", "bert2bert"):
+        _clear()
+        t0 = time.time()
+        hist = BASELINES[name](cfg, ML_GPT, tc, arena.batch_fn,
+                               target_loss=arena.target)
+        s = arena.saving(hist)
+        results[name] = s
+        emit(f"table2/gpt/{name}", (time.time() - t0) * 1e6 / max(len(hist.step), 1),
+             f"flops_saving={s['flops_saving']:.3f}")
+    save_json("table2_gpt", results)
+    return results
+
+
+def bench_table3_deit(quick: bool = False) -> Dict:
+    cfg = paper_models.deit_proxy(d_model=64, n_layers=4)
+    tc = proxy_tc(quick, seq_len=0 or 24)
+    arena = Arena(cfg, tc)
+    results: Dict = {"scratch": {"target_loss": arena.target}}
+    emit("table3/deit/scratch", arena.step_us, f"final_loss={arena.target:.3f}")
+    _run_ours(arena, ML_GPT, "table3/deit/ours", results)
+    save_json("table3_deit", results)
+    return results
+
+
+def bench_table4_levels(quick: bool = False) -> Dict:
+    cfg = paper_models.bert_proxy(d_model=96, n_layers=8).replace(name="bert-large-proxy")
+    tc = proxy_tc(quick)
+    arena = Arena(cfg, tc)
+    results: Dict = {"scratch": {"target_loss": arena.target}}
+    emit("table4/bert-large/scratch", arena.step_us, f"final_loss={arena.target:.3f}")
+    for k in (2, 3):
+        ml = MultiLevelConfig(n_levels=k, alpha=0.5, e_a_frac=0.05,
+                              e_small_frac=0.5 if k == 2 else 0.35)
+        _run_ours(arena, ml, f"table4/bert-large/levels{k}", results)
+    save_json("table4_levels", results)
+    return results
+
+
+def bench_table5_ablations(quick: bool = False) -> Dict:
+    cfg = paper_models.bert_proxy(d_model=64, n_layers=4)
+    tc = proxy_tc(quick)
+    arena = Arena(cfg, tc)
+    results: Dict = {"scratch": {"target_loss": arena.target}}
+    emit("table5/scratch", arena.step_us, f"final_loss={arena.target:.3f}")
+    # (A) E_a too large kills the effect; (B) E_small; (C) alpha incl. 1.0
+    arms = {
+        "Ea0.05": MultiLevelConfig(2, alpha=0.5, e_a_frac=0.05, e_small_frac=0.5),
+        "Ea0.33": MultiLevelConfig(2, alpha=0.5, e_a_frac=0.33, e_small_frac=0.5),
+        "Esmall0.17": MultiLevelConfig(2, alpha=0.5, e_a_frac=0.05, e_small_frac=0.17),
+        "Esmall1.0": MultiLevelConfig(2, alpha=0.5, e_a_frac=0.05, e_small_frac=1.0),
+        "alpha0.05": MultiLevelConfig(2, alpha=0.05, e_a_frac=0.05, e_small_frac=0.5),
+        "alpha1.0": MultiLevelConfig(2, alpha=1.0, e_a_frac=0.05, e_small_frac=0.5),
+        "adjF": MultiLevelConfig(2, alpha=0.5, e_a_frac=0.05, e_small_frac=0.5,
+                                 width_variant="adj"),
+    }
+    if quick:
+        for key in ("Esmall0.17", "Esmall1.0", "adjF"):
+            arms.pop(key)
+    for tag, ml in arms.items():
+        _run_ours(arena, ml, f"table5/{tag}", results)
+    save_json("table5_ablations", results)
+    return results
+
+
+def bench_appendixF_no_coalesce(quick: bool = False) -> Dict:
+    """Random small-model init inside the V-cycle (coalescing removed)."""
+    import jax
+
+    from repro.core import operators as ops
+    from repro.core.vcycle import History, train_segment
+    from repro.models.api import build_model
+
+    cfg = paper_models.bert_proxy(d_model=64, n_layers=4)
+    tc = proxy_tc(quick)
+    arena = Arena(cfg, tc)
+    ml = ML_BERT
+    results: Dict = {}
+    # with coalescing
+    _run_ours(arena, ml, "appF/with_coalesce", results)
+    # without: random-init small model, then de-coalesce + interpolate as usual
+    small_cfg = ops.coalesce_config(cfg, ml)
+    small = build_model(small_cfg)
+    model = build_model(cfg)
+    hist = History()
+    E_a = max(int(round(tc.steps * ml.e_a_frac)), 1)
+    E_s = max(int(round(tc.steps * ml.e_small_frac)), 1)
+    p0, _, hist, cum, g = train_segment(model, tc, arena.batch_fn, E_a, history=hist, level=0)
+    ps, _, hist, cum, g = train_segment(small, tc, arena.batch_fn, E_s,
+                                        params=small.init(jax.random.PRNGKey(99)),
+                                        history=hist, start_flops=cum, start_step=g, level=1)
+    de = ops.make_decoalesce_fn(model.specs(), cfg, ml)(ps)
+    p1 = ops.make_interpolate_fn(ml.alpha)(p0, de)
+    _, _, hist, cum, g = train_segment(model, tc, arena.batch_fn, tc.steps, params=p1,
+                                       history=hist, start_flops=cum, start_step=g,
+                                       level=0, target_loss=arena.target)
+    s = arena.saving(hist)
+    results["appF/random_small_init"] = s
+    emit("appF/random_small_init", arena.step_us, f"flops_saving={s['flops_saving']:.3f}")
+    save_json("appendixF", results)
+    return results

@@ -1,0 +1,74 @@
+"""Roofline report: reads the dry-run artifact JSON and emits the per-cell
+three-term table (compute / memory / collective seconds, bottleneck, useful
+FLOPs ratio, roofline fraction) + a markdown table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import RESULTS_DIR, emit
+
+DRYRUN = os.path.join(RESULTS_DIR, "dryrun.json")
+
+
+def load(path: str = DRYRUN) -> Dict:
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows(results: Dict, mesh: Optional[str] = "16x16") -> List[Dict]:
+    out = []
+    for key, rec in sorted(results.items()):
+        if rec.get("status") != "ok":
+            continue
+        arch, shape, m = key.split("|")
+        if mesh and m != mesh:
+            continue
+        rl = rec["roofline"]
+        out.append({
+            "arch": arch, "shape": shape, "mesh": m,
+            "t_compute": rl["t_compute_s"], "t_memory": rl["t_memory_s"],
+            "t_collective": rl["t_collective_s"], "bottleneck": rl["bottleneck"],
+            "useful": rl["useful_flops_ratio"], "fraction": rl["roofline_fraction"],
+            "params": rec.get("params", 0),
+            "bytes_per_dev": rec["memory"]["peak_bytes_est"],
+            "collectives": rec["collectives"].get("total", {}),
+        })
+    return out
+
+
+def markdown_table(rws: List[Dict]) -> str:
+    hdr = ("| arch | shape | t_compute | t_memory | t_coll | bound | "
+           "useful(6ND/HLO) | roofline frac | bytes/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rws:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.1f}ms | "
+            f"{r['t_memory']*1e3:.1f}ms | {r['t_collective']*1e3:.1f}ms | "
+            f"{r['bottleneck']} | {r['useful']:.2f} | {r['fraction']:.3f} | "
+            f"{r['bytes_per_dev']/2**30:.2f}GiB |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def bench_roofline(quick: bool = False) -> List[Dict]:
+    results = load()
+    if not results:
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return []
+    all_rows = []
+    for mesh in ("16x16", "2x16x16"):
+        rws = rows(results, mesh)
+        all_rows += rws
+        for r in rws:
+            step = max(r["t_compute"], r["t_memory"], r["t_collective"])
+            emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}", step * 1e6,
+                 f"bound={r['bottleneck']};frac={r['fraction']:.3f};useful={r['useful']:.2f}")
+        if rws:
+            os.makedirs(RESULTS_DIR, exist_ok=True)
+            with open(os.path.join(RESULTS_DIR, f"roofline_{mesh}.md"), "w") as f:
+                f.write(markdown_table(rws))
+    return all_rows

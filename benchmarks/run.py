@@ -1,0 +1,47 @@
+"""Benchmark entry point: one function per paper table + kernel micro-bench +
+the roofline report.  Prints ``name,us_per_call,derived`` CSV.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only table1,kernels] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help="comma list of: table1,table2,table3,table4,table5,appF,kernels,roofline")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only != "all" else {
+        "table1", "table2", "table3", "table4", "table5", "appF", "kernels", "roofline"}
+
+    from benchmarks import kernel_bench, paper_tables, roofline
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    if "kernels" in want:
+        kernel_bench.bench_kernels(args.quick)
+    if "roofline" in want:
+        roofline.bench_roofline(args.quick)
+    if "table1" in want:
+        paper_tables.bench_table1_bert(args.quick)
+    if "table2" in want:
+        paper_tables.bench_table2_gpt(args.quick)
+    if "table3" in want:
+        paper_tables.bench_table3_deit(args.quick)
+    if "table4" in want:
+        paper_tables.bench_table4_levels(args.quick)
+    if "table5" in want:
+        paper_tables.bench_table5_ablations(args.quick)
+    if "appF" in want:
+        paper_tables.bench_appendixF_no_coalesce(args.quick)
+    print(f"# total {time.time()-t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Fault-tolerance demo: train, checkpoint, simulate preemption, resume on a
+DIFFERENT mesh layout (elastic re-shard on restore).
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+from repro.config import TrainConfig
+from repro.configs import get_config
+from repro.launch.train import make_batch_fn
+from repro.models.api import build_model, init_train_state, make_train_step
+
+CKPT = "/tmp/elastic_demo_ckpt"
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    tc = TrainConfig(steps=12, warmup_steps=1, batch_size=4, seq_len=32, log_every=2)
+    model = build_model(cfg)
+    batch_fn = make_batch_fn(cfg, tc)
+    step = jax.jit(make_train_step(model, tc))
+    cm = CheckpointManager(CKPT)
+
+    params, opt = init_train_state(model, tc, jax.random.PRNGKey(0))
+    print("== phase 1: train 6 steps on 'mesh A' then checkpoint ==")
+    for i in range(6):
+        params, opt, m = step(params, opt, batch_fn(i))
+    cm.save(6, {"params": params, "opt": opt}, meta={"step": 6})
+    print(f"checkpointed at step 6 (loss {float(m['loss']):.4f})")
+
+    print("== simulated preemption: process state dropped ==")
+    del params, opt
+
+    print("== phase 2: resume onto a different mesh layout ==")
+    # container has 1 CPU device; the mechanism is identical for any topology:
+    # pass target NamedShardings and restore() re-shards with device_put.
+    mesh_b = jax.make_mesh((1, 1), ("data", "model"))
+    p0, o0 = init_train_state(model, tc, jax.random.PRNGKey(0))
+    sh = {
+        "params": jax.tree.map(lambda _: NamedSharding(mesh_b, P()), p0),
+        "opt": jax.tree.map(lambda _: NamedSharding(mesh_b, P()), o0),
+    }
+    restored, meta = cm.restore({"params": p0, "opt": o0}, shardings=sh)
+    params, opt = restored["params"], restored["opt"]
+    print(f"resumed from step {meta['step']} onto mesh {dict(mesh_b.shape)}")
+    for i in range(meta["step"], tc.steps):
+        params, opt, m = step(params, opt, batch_fn(i))
+    print(f"finished at step {tc.steps} (loss {float(m['loss']):.4f}) -- "
+          "deterministic data sharding made the resumed stream identical")
+
+
+if __name__ == "__main__":
+    main()

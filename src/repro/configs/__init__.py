@@ -1,0 +1,66 @@
+"""Architecture registry: ``--arch <id>`` resolution for launcher/dry-run.
+
+Ten assigned architectures + the paper's own models.  ``get_config(id)``
+returns the exact full-size config; ``get_config(id, smoke=True)`` a reduced
+same-family config for CPU smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.config import ModelConfig
+
+from repro.configs import (  # noqa: E402
+    command_r_35b,
+    deepseek_v3_671b,
+    jamba_1_5_large_398b,
+    llama32_vision_11b,
+    paper_models,
+    phi35_moe_42b,
+    qwen3_14b,
+    qwen3_4b,
+    tinyllama_1_1b,
+    whisper_large_v3,
+    xlstm_125m,
+)
+
+_MODULES = {
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "phi3.5-moe-42b-a6.6b": phi35_moe_42b,
+    "tinyllama-1.1b": tinyllama_1_1b,
+    "qwen3-4b": qwen3_4b,
+    "qwen3-14b": qwen3_14b,
+    "command-r-35b": command_r_35b,
+    "jamba-1.5-large-398b": jamba_1_5_large_398b,
+    "xlstm-125m": xlstm_125m,
+    "llama-3.2-vision-11b": llama32_vision_11b,
+    "whisper-large-v3": whisper_large_v3,
+}
+
+ASSIGNED: List[str] = list(_MODULES)
+
+PAPER_CONFIGS = {
+    "bert-base": paper_models.BERT_BASE,
+    "bert-large": paper_models.BERT_LARGE,
+    "gpt-base": paper_models.GPT_BASE,
+    "deit-b": paper_models.DEIT_B,
+}
+
+# architectures with sub-quadratic sequence mixing: the only ones that run the
+# long_500k cell (assignment rule; skips documented in DESIGN.md §4)
+LONG_CONTEXT_CAPABLE = ("jamba-1.5-large-398b", "xlstm-125m")
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name in _MODULES:
+        return _MODULES[name].smoke() if smoke else _MODULES[name].FULL
+    if name in PAPER_CONFIGS:
+        return PAPER_CONFIGS[name]
+    raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES) + sorted(PAPER_CONFIGS)}")
+
+
+def cell_is_skipped(arch: str, shape_name: str) -> str:
+    """Returns a reason string if (arch, shape) is skipped, else ''."""
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_CAPABLE:
+        return "long_500k needs sub-quadratic attention (pure full-attention arch)"
+    return ""

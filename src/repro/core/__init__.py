@@ -1,0 +1,27 @@
+"""The paper's primary contribution: multi-level V-cycle training.
+
+operators.py    Coalescing / De-coalescing / Interpolation (Eqs. 1-13)
+projections.py  F/R/G/T matrix builders (stack & adj variants, App. E)
+vcycle.py       Algorithm 1 + FLOPs-indexed training histories
+baselines.py    StackBERT / bert2BERT / LiGO / Network Expansion / KI
+flops.py        analytic FLOPs accounting (evaluation axis + roofline ref)
+"""
+from repro.core.operators import (  # noqa: F401
+    build_level_maps,
+    coalesce,
+    coalesce_config,
+    decoalesce,
+    interpolate,
+    make_coalesce_fn,
+    make_decoalesce_fn,
+    make_interpolate_fn,
+)
+from repro.core.vcycle import (  # noqa: F401
+    History,
+    VCycleOutput,
+    flops_to_reach,
+    run_scratch,
+    run_vcycle,
+    saving_vs_baseline,
+    train_segment,
+)

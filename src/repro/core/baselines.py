@@ -1,0 +1,203 @@
+"""The paper's five comparison baselines (Table 1/2/3), implemented at proxy
+scale against the same FLOPs-indexed History so savings are computed
+identically for every method.  All "grow" methods include the small-model
+training cost, as the paper does for fairness (§4.1 Baselines).
+
+* scratch            -- plain training of the target model (the reference).
+* StackBERT          -- depth-only: train an L/2 model, progressively stack.
+* bert2BERT          -- width-only: function-preserving expansion (our width
+                        de-coalescing matrices ARE the averaged Net2Net FPI).
+* LiGO               -- learn the (width x depth) linear growth operator by
+                        SGD on the mapped-model loss, then continue training.
+* Network Expansion  -- expand the EMA of the small model's parameters.
+* KI                 -- knowledge inheritance: train the large model with a
+                        distillation term from the trained small teacher.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, MultiLevelConfig, TrainConfig
+from repro.core import flops as flops_lib
+from repro.core import operators as ops
+from repro.core.vcycle import History, train_segment
+from repro.models.api import build_model, make_train_step
+from repro.optim import adamw_init, adamw_update
+
+
+def _grow_then_train(cfg, ml, tc, batch_fn, *, width: bool, depth: bool,
+                     small_steps: int, final_steps: int, seed: int,
+                     target_loss=None, ema_decay: Optional[float] = None,
+                     depth_variant: Optional[str] = None) -> History:
+    """Shared scaffold: train small -> expand -> train large."""
+    if depth_variant is not None:
+        ml = dataclasses.replace(ml, depth_variant=depth_variant)
+    small_cfg = ops.coalesce_config(cfg, ml, width=width, depth=depth)
+    small = build_model(small_cfg)
+    hist = History()
+    params_s = small.init(jax.random.PRNGKey(seed))
+
+    ema = params_s
+    if ema_decay is None:
+        params_s, _, hist, cum, g = train_segment(
+            small, tc, batch_fn, small_steps, params=params_s, history=hist,
+            level=1, seed=seed)
+    else:  # Network Expansion: maintain EMA during small training
+        step_fn = jax.jit(make_train_step(small, tc))
+        opt = adamw_init(params_s, tc)
+        fps = flops_lib.train_step_flops(small_cfg, small.specs(), tc.batch_size, tc.seq_len)
+        cum, g = 0.0, 0
+        ema_fn = jax.jit(lambda e, p: jax.tree.map(
+            lambda a, b: ema_decay * a + (1 - ema_decay) * b, e, p))
+        for i in range(small_steps):
+            params_s, opt, metrics = step_fn(params_s, opt, batch_fn(g))
+            ema = ema_fn(ema, params_s)
+            cum += fps
+            g += 1
+            if i % tc.log_every == 0:
+                hist.log(cum, float(metrics["loss"]), g, 1)
+        params_s = ema
+
+    grow = ops.make_decoalesce_fn(build_model(cfg).specs(), cfg, ml,
+                                  width=width, depth=depth)
+    params = grow(params_s)
+    model = build_model(cfg)
+    _, _, hist, cum, g = train_segment(
+        model, tc, batch_fn, final_steps, params=params, history=hist,
+        start_flops=cum, start_step=g, level=0, seed=seed, target_loss=target_loss)
+    return hist
+
+
+def run_stackbert(cfg, ml, tc, batch_fn, *, small_steps=None, final_steps=None,
+                  seed=0, target_loss=None) -> History:
+    return _grow_then_train(
+        cfg, ml, tc, batch_fn, width=False, depth=True, depth_variant="stack",
+        small_steps=small_steps or tc.steps // 2, final_steps=final_steps or tc.steps,
+        seed=seed, target_loss=target_loss)
+
+
+def run_bert2bert(cfg, ml, tc, batch_fn, *, small_steps=None, final_steps=None,
+                  seed=0, target_loss=None) -> History:
+    return _grow_then_train(
+        cfg, ml, tc, batch_fn, width=True, depth=False,
+        small_steps=small_steps or tc.steps // 2, final_steps=final_steps or tc.steps,
+        seed=seed, target_loss=target_loss)
+
+
+def run_network_expansion(cfg, ml, tc, batch_fn, *, small_steps=None, final_steps=None,
+                          seed=0, target_loss=None) -> History:
+    return _grow_then_train(
+        cfg, ml, tc, batch_fn, width=True, depth=True, ema_decay=0.999,
+        small_steps=small_steps or tc.steps // 2, final_steps=final_steps or tc.steps,
+        seed=seed, target_loss=target_loss)
+
+
+# ---------------------------------------------------------------------------
+# LiGO: learned linear growth operator
+
+
+def run_ligo(cfg, ml, tc, batch_fn, *, small_steps=None, final_steps=None,
+             fit_steps: int = 30, fit_lr: float = 1e-2, seed=0,
+             target_loss=None) -> History:
+    small_cfg = ops.coalesce_config(cfg, ml)
+    small = build_model(small_cfg)
+    model = build_model(cfg)
+    specs = model.specs()
+    hist = History()
+    params_s, _, hist, cum, g = train_segment(
+        small, tc, batch_fn, small_steps or tc.steps // 2, history=hist, level=1, seed=seed)
+
+    # trainable expansion: start from the analytic de-coalescing matrices
+    maps0 = ops.build_level_maps(cfg, ml).as_jnp()
+    theta = {
+        "width": {ax: {"T_out": m.T_out, "T_in": m.T_in} for ax, m in maps0.width.items()},
+        "depth": {k: {"G": d.G} for k, d in maps0.depth.items()},
+    }
+
+    def project(theta, p_small):
+        import repro.core.projections as proj
+
+        width = {ax: proj.WidthMats(F_out=None, F_in=None, T_out=t["T_out"], T_in=t["T_in"])
+                 for ax, t in theta["width"].items()}
+        depth = {k: proj.DepthMats(R=None, G=d["G"]) for k, d in theta["depth"].items()}
+        maps = ops.LevelMaps(width=width, depth=depth)
+        return ops._project_tree(p_small, specs, maps, "decoalesce", cfg.coalesce_experts)
+
+    def fit_loss(theta, batch):
+        return model.loss(project(theta, params_s), batch)[0]
+
+    fit_grad = jax.jit(jax.value_and_grad(fit_loss))
+    fit_fps = flops_lib.train_step_flops(cfg, specs, tc.batch_size, tc.seq_len)
+    for i in range(fit_steps):  # SGD on the growth operator (LiGO's inner loop)
+        loss, gr = fit_grad(theta, batch_fn(g))
+        theta = jax.tree.map(lambda t, d: t - fit_lr * d, theta, gr)
+        cum += fit_fps
+        g += 1
+        if i % tc.log_every == 0:
+            hist.log(cum, float(loss), g, 0)
+
+    params = jax.jit(lambda th: project(th, params_s))(theta)
+    _, _, hist, cum, g = train_segment(
+        model, tc, batch_fn, final_steps or tc.steps, params=params, history=hist,
+        start_flops=cum, start_step=g, level=0, seed=seed, target_loss=target_loss)
+    return hist
+
+
+# ---------------------------------------------------------------------------
+# KI: knowledge inheritance (distill small teacher into the large student)
+
+
+def run_ki(cfg, ml, tc, batch_fn, *, small_steps=None, final_steps=None,
+           seed=0, target_loss=None, kd_weight: float = 0.5) -> History:
+    small_cfg = ops.coalesce_config(cfg, ml)
+    small = build_model(small_cfg)
+    model = build_model(cfg)
+    hist = History()
+    teacher, _, hist, cum, g = train_segment(
+        small, tc, batch_fn, small_steps or tc.steps // 2, history=hist, level=1, seed=seed)
+
+    fs = final_steps or tc.steps
+
+    def kd_loss(params, batch, step_frac):
+        loss, metrics = model.loss(params, batch)
+        t_logits = jax.lax.stop_gradient(small.forward_logits(teacher, batch))
+        s_logits = model.forward_logits(params, batch)
+        t_lp = jax.nn.log_softmax(t_logits.astype(jnp.float32), -1)
+        s_lp = jax.nn.log_softmax(s_logits.astype(jnp.float32), -1)
+        kl = jnp.mean(jnp.sum(jnp.exp(t_lp) * (t_lp - s_lp), -1))
+        w = kd_weight * (1.0 - step_frac)  # decay the inheritance term
+        return (1 - w) * loss + w * kl, metrics
+
+    grad_fn = jax.jit(jax.value_and_grad(kd_loss, has_aux=True))
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = adamw_init(params, tc)
+    # student pays its own cost + the teacher forward
+    fps = (flops_lib.train_step_flops(cfg, model.specs(), tc.batch_size, tc.seq_len)
+           + flops_lib.forward_flops(cfg, model.specs(), tc.batch_size, tc.seq_len)  # extra student fwd
+           + flops_lib.forward_flops(small_cfg, small.specs(), tc.batch_size, tc.seq_len))
+    upd = jax.jit(lambda p, gr, o: adamw_update(p, gr, o, tc))
+    for i in range(fs):
+        (_, metrics), gr = grad_fn(params, batch_fn(g), i / fs)
+        params, opt, _ = upd(params, gr, opt)
+        cum += fps
+        g += 1
+        if i % tc.log_every == 0 or i == fs - 1:
+            hist.log(cum, float(metrics["loss"]), g, 0)
+            if target_loss is not None:
+                _, sm = hist.smoothed(5)
+                if len(sm) and sm[-1] <= target_loss:
+                    break
+    return hist
+
+
+BASELINES: Dict[str, Callable] = {
+    "stackbert": run_stackbert,
+    "bert2bert": run_bert2bert,
+    "ligo": run_ligo,
+    "network_expansion": run_network_expansion,
+    "ki": run_ki,
+}

@@ -1,0 +1,225 @@
+"""The paper's three operators on arbitrary models (Coalescing, De-coalescing,
+Interpolation), driven entirely by the per-leaf logical-axis metadata.
+
+For every width-coalescible logical axis (embed, mlp, heads, kv_heads, lora
+ranks, expert dims, ...) one shared set of projection matrices is built --
+which *is* the Appendix-A constraint structure: residual stream, Q/K alignment
+and norm scales automatically share their F.  The "layers" axis is handled by
+the depth matrices R/G per stage.  Protected axes (head_dim, rope dims,
+d_state, conv taps, vocab, per-head recurrent memories) are never projected;
+see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, MultiLevelConfig, Stage
+from repro.core import projections as proj
+from repro.param import Spec, is_spec
+
+# logical axes subject to width coalescing, with the config field giving their size
+WIDTH_AXES = (
+    "embed", "mlp", "heads", "kv_heads", "q_lora", "kv_lora",
+    "moe_mlp", "shared_mlp", "mamba_inner", "dt_rank", "experts", "embed_cat2",
+)
+
+
+def axis_sizes(cfg: ModelConfig) -> Dict[str, int]:
+    """Current size of every width-coalescible axis present in this model."""
+    s: Dict[str, int] = {"embed": cfg.d_model, "heads": cfg.n_heads,
+                         "kv_heads": cfg.n_kv_heads, "embed_cat2": 2 * cfg.d_model}
+    if cfg.d_ff:
+        s["mlp"] = cfg.d_ff
+    if cfg.attn_type == "mla":
+        s["q_lora"] = cfg.q_lora_rank
+        s["kv_lora"] = cfg.kv_lora_rank
+    if cfg.n_experts:
+        s["moe_mlp"] = cfg.moe_d_ff or cfg.d_ff
+        if cfg.n_shared_experts:
+            s["shared_mlp"] = cfg.n_shared_experts * (cfg.moe_d_ff or cfg.d_ff)
+        if cfg.coalesce_experts:
+            s["experts"] = cfg.n_experts
+    if any(b.mixer == "mamba" for st in cfg.stages for b in st.pattern):
+        s["mamba_inner"] = cfg.mamba_d_inner
+        s["dt_rank"] = cfg.resolved_dt_rank
+    return s
+
+
+def coalesce_config(cfg: ModelConfig, ml: Optional[MultiLevelConfig] = None,
+                    *, width: bool = True, depth: bool = True) -> ModelConfig:
+    """The next-level (smaller) model config: width and depth halved.
+
+    A dimension is halved iff it is even -- exactly the condition under which
+    ``build_level_maps`` constructs its width matrices, so config and
+    projected parameter shapes stay consistent for any architecture.
+    ``width``/``depth`` switches support the single-direction baselines
+    (StackBERT = depth-only, bert2BERT = width-only).
+    """
+    halve = (lambda x: x // 2 if (x and x % 2 == 0) else x) if width else (lambda x: x)
+    if depth:
+        new_stages = tuple(Stage(st.pattern, (st.repeats + 1) // 2) for st in cfg.stages)
+    else:
+        new_stages = cfg.stages
+    kw: Dict[str, Any] = dict(
+        d_model=halve(cfg.d_model),
+        n_heads=halve(cfg.n_heads),
+        n_kv_heads=halve(cfg.n_kv_heads),
+        d_ff=halve(cfg.d_ff),
+        stages=new_stages,
+        head_dim=cfg.resolved_head_dim,  # head width preserved; heads merge whole
+    )
+    if cfg.attn_type == "mla":
+        kw.update(q_lora_rank=halve(cfg.q_lora_rank), kv_lora_rank=halve(cfg.kv_lora_rank))
+    if cfg.n_experts:
+        kw.update(moe_d_ff=halve(cfg.moe_d_ff))
+        if cfg.coalesce_experts:
+            kw.update(n_experts=halve(cfg.n_experts),
+                      moe_top_k=min(cfg.moe_top_k, halve(cfg.n_experts)))
+    if any(b.mixer == "mamba" for st in cfg.stages for b in st.pattern):
+        kw.update(mamba_dt_rank=halve(cfg.resolved_dt_rank))
+    if cfg.n_encoder_layers and depth:
+        kw.update(n_encoder_layers=(cfg.n_encoder_layers + 1) // 2)
+    if any(b.mixer == "cross_attn" for st in cfg.stages for b in st.pattern):
+        # the stub frontend's feature dim is fixed; pin it before halving d_model
+        kw.update(vision_dim=cfg.vision_dim or cfg.d_model)
+    return cfg.replace(**kw)
+
+
+@dataclasses.dataclass
+class LevelMaps:
+    """Projection matrices between a (large cfg, small cfg) level pair."""
+
+    width: Dict[str, proj.WidthMats]
+    depth: Dict[str, proj.DepthMats]  # per stage name + "encoder"
+
+    def as_jnp(self, dtype=jnp.float32) -> "LevelMaps":
+        conv = lambda m: jax.tree.map(lambda a: jnp.asarray(a, dtype), m)
+        width = {k: proj.WidthMats(*[jnp.asarray(getattr(v, f.name), dtype)
+                                     for f in dataclasses.fields(v)])
+                 for k, v in self.width.items()}
+        depth = {k: proj.DepthMats(R=jnp.asarray(v.R, dtype), G=jnp.asarray(v.G, dtype))
+                 for k, v in self.depth.items()}
+        return LevelMaps(width=width, depth=depth)
+
+
+def build_level_maps(cfg: ModelConfig, ml: MultiLevelConfig,
+                     *, width: bool = True, depth: bool = True) -> LevelMaps:
+    wmats: Dict[str, proj.WidthMats] = {}
+    if width:
+        sizes = axis_sizes(cfg)
+        for ax, n in sizes.items():
+            if ax == "embed_cat2":
+                continue
+            if n >= 2 and n % 2 == 0:
+                wmats[ax] = proj.width_mats(n, ml.width_variant)
+        if "embed" in wmats:
+            wmats["embed_cat2"] = proj.block_diag_width(wmats["embed"], 2)
+    dmats: Dict[str, proj.DepthMats] = {}
+    if depth:
+        for i, st in enumerate(cfg.stages):
+            dmats[f"stage_{i}"] = proj.depth_mats(st.repeats, ml.depth_variant)
+        if cfg.n_encoder_layers:
+            dmats["encoder"] = proj.depth_mats(cfg.n_encoder_layers, ml.depth_variant)
+    return LevelMaps(width=wmats, depth=dmats)
+
+
+# ---------------------------------------------------------------------------
+# applying the projections to a parameter tree
+
+
+def _contract(w: jax.Array, dim: int, mat: jax.Array, mat_axis: int) -> jax.Array:
+    """Contract w's ``dim`` with mat's ``mat_axis``; result axis moved back."""
+    out = jnp.tensordot(w, mat, axes=([dim], [mat_axis]))
+    return jnp.moveaxis(out, -1, dim)
+
+
+def _width_leaf(w, spec: Spec, width: Dict[str, proj.WidthMats], direction: str,
+                coalesce_experts: bool):
+    for d, (ax, role) in enumerate(zip(spec.axes, spec.roles)):
+        if ax == "experts" and coalesce_experts and "experts" in width:
+            role = "out"  # expert pair-averaging (beyond-paper extension)
+        if ax not in width or role not in ("in", "out"):
+            continue
+        m = width[ax]
+        if direction == "coalesce":
+            w = _contract(w, d, m.F_out, 0) if role == "out" else _contract(w, d, m.F_in, 1)
+        else:
+            w = _contract(w, d, m.T_out, 0) if role == "out" else _contract(w, d, m.T_in, 1)
+    return w
+
+
+def _depth_leaf(w, spec: Spec, dm: proj.DepthMats, direction: str):
+    if not spec.axes or spec.axes[0] != "layers":
+        return w
+    if direction == "coalesce":
+        return jnp.einsum("l...,lj->j...", w, dm.R)  # R: [L, L2]
+    return jnp.einsum("l...,lj->j...", w, dm.G)  # G: [L2, L]
+
+
+def _project_tree(params, specs, maps: LevelMaps, direction: str,
+                  coalesce_experts: bool, depth_key: Optional[str] = None):
+    """Recurse through the tree, tracking which stage we are under so the right
+    depth matrices apply."""
+
+    def rec(p, s, dkey):
+        if is_spec(s):
+            w = _width_leaf(p, s, maps.width, direction, coalesce_experts)
+            if dkey is not None and dkey in maps.depth:
+                w = _depth_leaf(w, s, maps.depth[dkey], direction)
+            return w
+        out = {}
+        for k in s:
+            sub_dkey = dkey
+            if k.startswith("stage_"):
+                sub_dkey = k
+            elif k == "encoder":
+                sub_dkey = "encoder"
+            out[k] = rec(p[k], s[k], sub_dkey)
+        return out
+
+    return rec(params, specs, depth_key)
+
+
+def coalesce(params, specs, cfg: ModelConfig, ml: MultiLevelConfig,
+             maps: Optional[LevelMaps] = None):
+    """Paper Algorithm 2: width then depth (they commute on disjoint axes)."""
+    maps = (maps or build_level_maps(cfg, ml)).as_jnp()
+    return _project_tree(params, specs, maps, "coalesce", cfg.coalesce_experts)
+
+
+def decoalesce(params_small, specs, cfg: ModelConfig, ml: MultiLevelConfig,
+               maps: Optional[LevelMaps] = None):
+    """Paper Algorithm 3: depth then width.  ``specs``/``cfg`` are the LARGE
+    level's; ``params_small`` the small level's parameters."""
+    maps = (maps or build_level_maps(cfg, ml)).as_jnp()
+    return _project_tree(params_small, specs, maps, "decoalesce", cfg.coalesce_experts)
+
+
+def interpolate(params_large, params_decoalesced, alpha: float):
+    """Paper Algorithm 4 / Eq. 13: M <- (1-a) M + a D(M_small)."""
+    return jax.tree.map(
+        lambda a, b: ((1.0 - alpha) * a.astype(jnp.float32)
+                      + alpha * b.astype(jnp.float32)).astype(a.dtype),
+        params_large, params_decoalesced)
+
+
+def make_coalesce_fn(specs, cfg: ModelConfig, ml: MultiLevelConfig,
+                     *, width: bool = True, depth: bool = True):
+    """jit'd level-transition: at 100B+ scale these run as sharded einsums."""
+    maps = build_level_maps(cfg, ml, width=width, depth=depth).as_jnp()
+    return jax.jit(lambda p: _project_tree(p, specs, maps, "coalesce", cfg.coalesce_experts))
+
+
+def make_decoalesce_fn(specs, cfg: ModelConfig, ml: MultiLevelConfig,
+                       *, width: bool = True, depth: bool = True):
+    maps = build_level_maps(cfg, ml, width=width, depth=depth).as_jnp()
+    return jax.jit(lambda p: _project_tree(p, specs, maps, "decoalesce", cfg.coalesce_experts))
+
+
+def make_interpolate_fn(alpha: float):
+    return jax.jit(lambda a, b: interpolate(a, b, alpha))

@@ -1,0 +1,205 @@
+"""V-cycle training process (paper Algorithm 1) + generic training loop with
+FLOPs-indexed loss history (the paper's evaluation axis).
+
+The runner is production-shaped: per-level compiled steps are built once and
+cached; level transitions are jitted sharded einsums (no host round-trip); the
+optimizer is re-initialized at transitions (paper §Discussion / App. C); and
+the whole V-cycle state (level, phase, step) is checkpointable via
+``repro.checkpoint`` (see launch/train.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, MultiLevelConfig, TrainConfig
+from repro.core import flops as flops_lib
+from repro.core import operators as ops
+from repro.models.api import Model, build_model, make_train_step
+from repro.optim import adamw_init
+
+
+@dataclasses.dataclass
+class History:
+    """Loss trace indexed by cumulative training FLOPs."""
+
+    flops: List[float] = dataclasses.field(default_factory=list)
+    loss: List[float] = dataclasses.field(default_factory=list)
+    step: List[int] = dataclasses.field(default_factory=list)
+    level: List[int] = dataclasses.field(default_factory=list)
+
+    def log(self, f: float, l: float, s: int, lv: int):
+        self.flops.append(float(f))
+        self.loss.append(float(l))
+        self.step.append(int(s))
+        self.level.append(int(lv))
+
+    def smoothed(self, window: int = 5) -> Tuple[np.ndarray, np.ndarray]:
+        lo = np.asarray(self.loss)
+        fl = np.asarray(self.flops)
+        if len(lo) < window:
+            return fl, lo
+        kernel = np.ones(window) / window
+        sm = np.convolve(lo, kernel, mode="valid")
+        return fl[window - 1:], sm
+
+    def to_dict(self) -> Dict[str, list]:
+        return {"flops": self.flops, "loss": self.loss, "step": self.step, "level": self.level}
+
+
+def flops_to_reach(hist: History, target: float, window: int = 5) -> Optional[float]:
+    """First cumulative-FLOPs point where the smoothed loss crosses ``target``."""
+    fl, sm = hist.smoothed(window)
+    idx = np.nonzero(sm <= target)[0]
+    return float(fl[idx[0]]) if len(idx) else None
+
+
+def saving_vs_baseline(base: History, ours: History, window: int = 5) -> Dict[str, float]:
+    """The paper's headline metric: FLOPs saving at the baseline's final quality."""
+    _, sm = base.smoothed(window)
+    target = float(sm[-1])
+    f_base = flops_to_reach(base, target, window) or base.flops[-1]
+    f_ours = flops_to_reach(ours, target, window)
+    if f_ours is None:
+        return {"target_loss": target, "flops_saving": float("nan"),
+                "base_flops": f_base, "ours_flops": float("nan")}
+    return {"target_loss": target, "flops_saving": 1.0 - f_ours / f_base,
+            "base_flops": f_base, "ours_flops": f_ours}
+
+
+# ---------------------------------------------------------------------------
+# generic training segment
+
+
+def train_segment(
+    model: Model,
+    tc: TrainConfig,
+    batch_fn: Callable[[int], Dict[str, jax.Array]],
+    steps: int,
+    *,
+    params=None,
+    opt_state=None,
+    history: Optional[History] = None,
+    start_flops: float = 0.0,
+    start_step: int = 0,
+    level: int = 0,
+    seed: int = 0,
+    target_loss: Optional[float] = None,
+    step_fn=None,
+):
+    """Train ``model`` for ``steps`` optimizer steps, logging (flops, loss)."""
+    history = history if history is not None else History()
+    if params is None:
+        params = model.init(jax.random.PRNGKey(seed))
+    if opt_state is None:
+        opt_state = adamw_init(params, tc)
+    if step_fn is None:
+        step_fn = jax.jit(make_train_step(model, tc), donate_argnums=(0, 1))
+    specs = model.specs()
+    fps = flops_lib.train_step_flops(model.cfg, specs, tc.batch_size, tc.seq_len)
+    cum = start_flops
+    g = start_step
+    for i in range(steps):
+        batch = batch_fn(g)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        cum += fps
+        g += 1
+        if i % tc.log_every == 0 or i == steps - 1:
+            loss = float(metrics["loss"])
+            history.log(cum, loss, g, level)
+            if target_loss is not None and len(history.loss) >= 5:
+                _, sm = history.smoothed(5)
+                if len(sm) and sm[-1] <= target_loss:
+                    break
+    return params, opt_state, history, cum, g
+
+
+# ---------------------------------------------------------------------------
+# the V-cycle (Algorithm 1)
+
+
+@dataclasses.dataclass
+class VCycleOutput:
+    params: Any
+    history: History
+    configs: List[ModelConfig]
+    total_flops: float
+
+
+def run_vcycle(
+    cfg: ModelConfig,
+    ml: MultiLevelConfig,
+    tc: TrainConfig,
+    batch_fn: Callable[[int], Dict[str, jax.Array]],
+    *,
+    seed: int = 0,
+    target_loss: Optional[float] = None,
+    final_steps: Optional[int] = None,
+    verbose: bool = False,
+) -> VCycleOutput:
+    """Paper Algorithm 1.
+
+    Step budgets follow the paper: E_a = warmup-sized init segment per level
+    before coalescing; E_small = one half of the full cycle for every level
+    below the top; the top level then trains until convergence (here: until
+    ``target_loss`` or ``final_steps``/``tc.steps``).
+    """
+    K = ml.n_levels
+    cfgs = [cfg]
+    for _ in range(K - 1):
+        cfgs.append(ops.coalesce_config(cfgs[-1], ml))
+    models = [build_model(c) for c in cfgs]
+    specs = [m.specs() for m in models]
+    E_a = max(int(round(tc.steps * ml.e_a_frac)), 1)
+    E_small = max(int(round(tc.steps * ml.e_small_frac)), 1)
+
+    hist = History()
+    cum, g = 0.0, 0
+    params_before: List[Any] = [None] * K
+
+    # ---- downward sweep: init-train E_a then coalesce (Alg. 1 lines 1-4)
+    params = models[0].init(jax.random.PRNGKey(seed))
+    for l in range(K - 1):
+        params, _, hist, cum, g = train_segment(
+            models[l], tc, batch_fn, E_a, params=params, history=hist,
+            start_flops=cum, start_step=g, level=l, seed=seed)
+        params_before[l] = params
+        if verbose:
+            print(f"[vcycle] level {l} init-trained {E_a} steps, coalescing")
+        params = ops.make_coalesce_fn(specs[l], cfgs[l], ml)(params)
+
+    # ---- upward sweep: train E_small, de-coalesce, interpolate (lines 5-9)
+    for l in range(K - 1, 0, -1):
+        params, _, hist, cum, g = train_segment(
+            models[l], tc, batch_fn, E_small, params=params, history=hist,
+            start_flops=cum, start_step=g, level=l, seed=seed)
+        if verbose:
+            print(f"[vcycle] level {l} trained {E_small} steps, de-coalescing")
+        de = ops.make_decoalesce_fn(specs[l - 1], cfgs[l - 1], ml)(params)
+        params = ops.make_interpolate_fn(ml.alpha)(params_before[l - 1], de)
+
+    # ---- final: train M_1 until convergence (line 10)
+    fs = final_steps if final_steps is not None else tc.steps
+    params, _, hist, cum, g = train_segment(
+        models[0], tc, batch_fn, fs, params=params, history=hist,
+        start_flops=cum, start_step=g, level=0, seed=seed, target_loss=target_loss)
+    return VCycleOutput(params=params, history=hist, configs=cfgs, total_flops=cum)
+
+
+def run_scratch(
+    cfg: ModelConfig,
+    tc: TrainConfig,
+    batch_fn: Callable[[int], Dict[str, jax.Array]],
+    *,
+    seed: int = 0,
+    steps: Optional[int] = None,
+) -> Tuple[Any, History]:
+    model = build_model(cfg)
+    params, _, hist, _, _ = train_segment(
+        model, tc, batch_fn, steps or tc.steps, seed=seed, level=0)
+    return params, hist

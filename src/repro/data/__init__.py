@@ -1,0 +1,7 @@
+from repro.data.synthetic import (  # noqa: F401
+    MarkovLM,
+    lm_batch,
+    masked_lm_batch,
+    vision_batch,
+    chain_entropy,
+)

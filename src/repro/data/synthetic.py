@@ -1,0 +1,96 @@
+"""Deterministic synthetic corpora (container has no internet).
+
+* ``MarkovLM``  -- a sparse first-order Markov chain over the vocabulary with a
+  known stationary entropy: loss curves are meaningful (models genuinely learn
+  the transition structure) and the achievable-loss floor is computable, so
+  V-cycle vs from-scratch FLOPs-saving comparisons are well-posed.
+* ``vision_batch`` -- class-conditional Gaussian patch patterns for the DeiT
+  proxy (images are linearly separable given enough training, mimicking a
+  learnable classification task).
+
+Batches are a pure function of (seed, step, shard) => any host can regenerate
+any shard: deterministic, host-count-independent data sharding (straggler /
+elastic-restart friendly; see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class MarkovLM:
+    """Sparse Markov chain: each token has ``branch`` likely successors."""
+
+    vocab: int
+    branch: int = 4
+    seed: int = 1234
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        succ = rng.integers(0, self.vocab, size=(self.vocab, self.branch))
+        logits = rng.normal(size=(self.vocab, self.branch)) * 1.0
+        probs = np.exp(logits) / np.exp(logits).sum(-1, keepdims=True)
+        self.succ = jnp.asarray(succ, jnp.int32)
+        self.probs = jnp.asarray(probs, jnp.float32)
+
+    def entropy(self) -> float:
+        p = np.asarray(self.probs)
+        return float(-(p * np.log(p)).sum(-1).mean())
+
+    def sample(self, key: jax.Array, batch: int, seq: int) -> jax.Array:
+        k0, k1 = jax.random.split(key)
+        tok0 = jax.random.randint(k0, (batch,), 0, self.vocab)
+
+        def step(tok, k):
+            choice = jax.random.categorical(k, jnp.log(self.probs[tok]))
+            nxt = self.succ[tok, choice]
+            return nxt, nxt
+
+        keys = jax.random.split(k1, seq)
+        _, toks = jax.lax.scan(step, tok0, keys)
+        return jnp.concatenate([tok0[None], toks], 0).T[:, : seq + 1]  # [B, seq+1]
+
+
+def chain_entropy(vocab: int, branch: int = 4, seed: int = 1234) -> float:
+    return MarkovLM(vocab, branch, seed).entropy()
+
+
+def _batch_key(seed: int, step: int, shard: int) -> jax.Array:
+    return jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(seed), step), shard)
+
+
+def lm_batch(chain: MarkovLM, seed: int, step: int, batch: int, seq: int,
+             shard: int = 0) -> Dict[str, jax.Array]:
+    """Causal LM batch: tokens + next-token labels."""
+    toks = chain.sample(_batch_key(seed, step, shard), batch, seq)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def masked_lm_batch(chain: MarkovLM, seed: int, step: int, batch: int, seq: int,
+                    mask_id: int, mask_rate: float = 0.15, shard: int = 0) -> Dict[str, jax.Array]:
+    """BERT-style MLM batch: 15% positions replaced by [MASK]; labels=-1 elsewhere."""
+    key = _batch_key(seed, step, shard)
+    k0, k1 = jax.random.split(key)
+    toks = chain.sample(k0, batch, seq)[:, :seq]
+    mask = jax.random.bernoulli(k1, mask_rate, toks.shape)
+    inputs = jnp.where(mask, mask_id, toks)
+    labels = jnp.where(mask, toks, -1)
+    return {"tokens": inputs, "labels": labels}
+
+
+def vision_batch(seed: int, step: int, batch: int, n_patches: int, patch_dim: int,
+                 n_classes: int, shard: int = 0) -> Dict[str, jax.Array]:
+    """Class-conditional Gaussian patch patterns (learnable classification)."""
+    key = _batch_key(seed, step, shard)
+    k0, k1, k2 = jax.random.split(key, 3)
+    proto_key = jax.random.PRNGKey(seed + 77)  # class prototypes fixed across steps
+    protos = jax.random.normal(proto_key, (n_classes, n_patches, patch_dim)) * 0.5
+    labels = jax.random.randint(k0, (batch,), 0, n_classes)
+    noise = jax.random.normal(k1, (batch, n_patches, patch_dim))
+    patches = protos[labels] + noise
+    return {"patches": patches.astype(jnp.float32), "labels": labels}

@@ -1,0 +1,10 @@
+from repro.distributed.sharding import (  # noqa: F401
+    RULES,
+    activation_spec,
+    clear_mesh_ctx,
+    logical_spec,
+    mesh_ctx,
+    param_shardings,
+    set_mesh_ctx,
+    shard_l,
+)

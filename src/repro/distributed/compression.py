@@ -1,0 +1,65 @@
+"""Error-feedback int8 gradient compression for the data-parallel all-reduce.
+
+At 1000+ node scale the DP gradient reduction crosses DCN (between pods) where
+bandwidth, not latency, dominates; int8 quantization cuts those bytes 4x
+vs f32 (2x vs bf16).  Error feedback keeps the quantization noise unbiased
+over time (the residual is carried and re-added next step), which preserves
+convergence (Karimireddy et al., 2019).
+
+Usage inside a shard_map'd train step:
+    g_sum, ef = ef_int8_psum(grads, ef, axis_name="data")
+Off by default (TrainConfig.grad_compression="none"); the pure-pjit path keeps
+XLA's native reductions.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(x: jax.Array, ef: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Compress (x + carried error); returns (q, scale, new_error)."""
+    target = x.astype(jnp.float32) + ef
+    q, scale = quantize_int8(target)
+    new_ef = target - dequantize_int8(q, scale)
+    return q, scale, new_ef
+
+
+def ef_int8_psum(grads, ef_state, axis_name: str):
+    """Per-leaf int8 EF compression + psum over ``axis_name`` (inside shard_map).
+
+    The int8 payload is summed in int32 (lossless across <=2^23 ranks) and
+    de-quantized with the max participating scale.
+    """
+
+    def one(g, e):
+        q, scale, new_e = ef_compress(g, e)
+        # all ranks share the max scale so the int8 sum is consistent
+        smax = jax.lax.pmax(scale, axis_name)
+        q = jnp.clip(jnp.round((dequantize_int8(q, scale)) / smax), -127, 127)
+        total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        return (total.astype(jnp.float32) * smax).astype(g.dtype), new_e
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(td, [o[0] for o in out]),
+            jax.tree.unflatten(td, [o[1] for o in out]))
+
+
+def init_ef_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)

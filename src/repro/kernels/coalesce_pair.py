@@ -1,0 +1,76 @@
+"""Width-coalescing kernel (Pallas TPU): the paper's averaging F applied to a
+weight matrix as a single fused pass.
+
+For the "stack" variant F_out = [I/2; I/2] the column ("out"-role) projection
+is  Y[:, j] = w0 * (W[:, j] + W[:, j + m])  and the row ("in"-role) projection
+(F_in, weight 1.0 after the paper's normalization) is
+Y[i, :] = w0 * (W[i, :] + W[i + n2, :]).
+
+Instead of materializing F and running a [n x m] matmul (the naive path -- and
+the ref.py oracle), the kernel reads the two paired tiles of W via two
+BlockSpec views of the same array and writes one fused output tile: one pass
+over HBM, no F matrix, no MXU occupancy.  De-coalescing's T_out duplication is
+a gather (no kernel needed); T_in halves are this same kernel with w0=0.5.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pair_kernel(a_ref, b_ref, o_ref, *, w0: float):
+    o_ref[...] = (w0 * (a_ref[...].astype(jnp.float32)
+                        + b_ref[...].astype(jnp.float32))).astype(o_ref.dtype)
+
+
+def _divisor_block(n: int, pref: int) -> int:
+    """Largest divisor of n that is <= pref (keeps tiles HW-aligned when the
+    dim allows, and always valid)."""
+    b = min(pref, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+def coalesce_pair(
+    w: jax.Array,  # [n, c] (axis=0) or [r, n] (axis=1); n even
+    *,
+    axis: int,
+    w0: float = 0.5,
+    block: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Merge index pairs (i, i + n/2) along ``axis`` with weight ``w0``."""
+    if w.ndim != 2:
+        raise ValueError("coalesce_pair expects a 2D weight (fold other dims first)")
+    n = w.shape[axis]
+    if n % 2:
+        raise ValueError(f"axis {axis} size {n} must be even")
+    half = n // 2
+    r, c = w.shape
+    if axis == 0:
+        br = _divisor_block(half, block)
+        bc = _divisor_block(c, block)
+        grid = (half // br, c // bc)
+        a_spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+        b_spec = pl.BlockSpec((br, bc), lambda i, j: (i + half // br, j))
+        out_shape = jax.ShapeDtypeStruct((half, c), w.dtype)
+    else:
+        br = _divisor_block(r, block)
+        bc = _divisor_block(half, block)
+        grid = (r // br, half // bc)
+        a_spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+        b_spec = pl.BlockSpec((br, bc), lambda i, j: (i, j + half // bc))
+        out_shape = jax.ShapeDtypeStruct((r, half), w.dtype)
+
+    return pl.pallas_call(
+        functools.partial(_pair_kernel, w0=w0),
+        grid=grid,
+        in_specs=[a_spec, b_spec],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(w, w)

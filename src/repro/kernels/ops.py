@@ -1,0 +1,39 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the TPU is
+the TARGET) -- interpret mode executes the kernel body for correctness while
+``interpret=False`` emits the real Mosaic TPU kernel on hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.coalesce_pair import coalesce_pair as _coalesce_pair
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.interp_axpy import interp_axpy as _interp_axpy
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, scale=None, block_q=128, block_k=128,
+                    interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _flash_attention(q, k, v, causal=causal, scale=scale,
+                            block_q=block_q, block_k=block_k, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "w0", "block", "interpret"))
+def coalesce_pair(w, *, axis, w0=0.5, block=256, interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _coalesce_pair(w, axis=axis, w0=w0, block=block, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "block", "interpret"))
+def interp_axpy(a, b, alpha, *, block=1024, interpret=None):
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _interp_axpy(a, b, alpha, block=block, interpret=interp)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def naive_attention(q, k, v, *, causal: bool = True, scale: Optional[float] = None):
+    """q: [B,H,S,D], k: [B,H,T,D], v: [B,H,T,Dv] -> [B,H,S,Dv]; fp32 softmax."""
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    scale = D ** -0.5 if scale is None else scale
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtv->bhsv", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def coalesce_pair_ref(w, *, axis: int, w0: float = 0.5):
+    """Dense F-matrix oracle: F = [w0*I ; w0*I] contraction along ``axis``."""
+    n = w.shape[axis]
+    half = n // 2
+    F = np.zeros((n, half), np.float32)
+    F[np.arange(half), np.arange(half)] = w0
+    F[np.arange(half) + half, np.arange(half)] = w0
+    F = jnp.asarray(F)
+    if axis == 0:
+        return jnp.einsum("nm,nc->mc", F, w.astype(jnp.float32)).astype(w.dtype)
+    return jnp.einsum("rn,nm->rm", w.astype(jnp.float32), F).astype(w.dtype)
+
+
+def interp_axpy_ref(a, b, alpha: float):
+    return ((1.0 - alpha) * a.astype(jnp.float32) + alpha * b.astype(jnp.float32)).astype(a.dtype)

@@ -1,0 +1,184 @@
+"""Compiled-artifact analysis: HLO collective parsing + three-term roofline.
+
+The SPMD module is the *per-device* program, so ``cost_analysis()`` FLOPs /
+bytes and the parsed collective bytes are per-device quantities; the roofline
+terms below follow the assignment formulas with global = per_device x chips
+(the chips cancel: term = per_device / per-chip-rate).
+
+Collective byte model (per device, ring algorithms, group size g):
+  all-reduce       2 * B * (g-1)/g      (RS + AG phases)
+  all-gather           B * (g-1)/g      (B = gathered output)
+  reduce-scatter   B_out * (g-1)        (input = B_out * g)
+  all-to-all           B * (g-1)/g
+  collective-permute   B
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+ = (?P<result>.*?) "
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+
+
+def _result_bytes(result: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(result):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-op-kind counts and per-device ICI bytes from compiled HLO text."""
+    stats: Dict[str, Dict[str, float]] = {}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if "-done(" in line:  # async pairs: count the -start only
+            continue
+        B = _result_bytes(m.group("result"))
+        g = _group_size(line)
+        if g <= 1:
+            continue
+        frac = (g - 1) / g
+        if op == "all-reduce":
+            moved = 2 * B * frac
+        elif op == "all-gather":
+            moved = B * frac
+        elif op == "reduce-scatter":
+            moved = B * (g - 1)
+        elif op == "all-to-all":
+            moved = B * frac
+        else:  # collective-permute
+            moved = B
+        s = stats.setdefault(op, {"count": 0, "bytes": 0.0})
+        s["count"] += 1
+        s["bytes"] += moved
+    stats["total"] = {"count": sum(s["count"] for k, s in stats.items() if k != "total"),
+                      "bytes": sum(s["bytes"] for k, s in stats.items() if k != "total")}
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Three-term roofline (seconds) for one compiled step on the target mesh."""
+
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    n_devices: int
+    model_flops: float  # 6*N*D reference (global)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs (catches remat/redundancy waste)."""
+        hlo_global = self.flops_per_device * self.n_devices
+        return self.model_flops / hlo_global if hlo_global else float("nan")
+
+    @property
+    def step_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of peak at the roofline-modelled step time."""
+        useful = self.model_flops / self.n_devices / PEAK_FLOPS_BF16
+        return useful / self.step_time if self.step_time else float("nan")
+
+    def to_dict(self) -> Dict[str, float]:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "n_devices": self.n_devices,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analyze_compiled(compiled, n_devices: int, model_flops: float) -> Tuple[Roofline, Dict]:
+    """Roofline terms from the compiled artifact.
+
+    Uses the trip-count-aware HLO walk (launch/hlo_cost.py) because XLA's own
+    ``cost_analysis()`` counts ``while`` bodies once -- wrong for every
+    scan-based model.  The raw XLA numbers ride along for reference.
+    """
+    from repro.launch.hlo_cost import analyze_text
+
+    t = analyze_text(compiled.as_text())
+    colls = t["collectives"]
+    rl = Roofline(flops_per_device=float(t["flops"]), bytes_per_device=float(t["bytes"]),
+                  coll_bytes_per_device=colls.get("total", {}).get("bytes", 0.0),
+                  n_devices=n_devices, model_flops=model_flops)
+    return rl, colls
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    m = compiled.memory_analysis()
+    return {
+        "argument_bytes": getattr(m, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(m, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(m, "temp_size_in_bytes", 0),
+        "alias_bytes": getattr(m, "alias_size_in_bytes", 0),
+        "peak_bytes_est": (getattr(m, "argument_size_in_bytes", 0)
+                           + getattr(m, "output_size_in_bytes", 0)
+                           + getattr(m, "temp_size_in_bytes", 0)
+                           - getattr(m, "alias_size_in_bytes", 0)),
+        "code_bytes": getattr(m, "generated_code_size_in_bytes", 0),
+    }

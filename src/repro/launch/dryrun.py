@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent without real
+hardware.
+
+For every (architecture x input-shape) cell and each production mesh
+(single-pod 16x16 and multi-pod 2x16x16 = 512 chips), this lowers and compiles
+the real step function -- full ``train_step`` (grads + AdamW + grad-accum) for
+train shapes, ``prefill_step`` / ``serve_step`` for inference shapes -- against
+ShapeDtypeStruct stand-ins (no allocation: the 671B models never materialize),
+prints ``memory_analysis()`` (proves it fits) and ``cost_analysis()`` (FLOPs /
+bytes for the roofline), parses the collective schedule out of the compiled
+HLO, and appends everything to a resumable JSON used by EXPERIMENTS.md
+SDry-run / SRoofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--force] [--out benchmarks/results]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import SHAPES, ModelConfig, ShapeConfig
+from repro.configs import ASSIGNED, cell_is_skipped, get_config
+from repro.core import flops as flops_lib
+from repro.distributed import param_shardings, set_mesh_ctx
+from repro.distributed.sharding import SERVE_RULES, logical_spec
+from repro.launch import specs as specs_lib
+from repro.launch.analysis import analyze_compiled, memory_summary
+from repro.launch.mesh import make_production_mesh
+from repro.models.api import build_model, make_prefill_step, make_serve_step, make_train_step
+from repro.optim import adamw_init_specs
+from repro.param import struct_tree
+
+
+def dict_or_none(rules):
+    if rules is None:
+        return None
+    from repro.distributed.sharding import RULES
+
+    return dict(RULES, **rules)
+
+
+def batch_shardings(batch_axes: Dict[str, Any], batch_structs, mesh):
+    return jax.tree.map(
+        lambda s, ax: NamedSharding(mesh, logical_spec(s.shape, ax, mesh)),
+        batch_structs, batch_axes)
+
+
+def lower_cell(arch: str, shape: ShapeConfig, mesh, *, verbose: bool = True) -> Dict[str, Any]:
+    cfg = specs_lib.model_config_for(get_config(arch), shape)
+    tc = specs_lib.train_config_for(cfg, shape)
+    model = build_model(cfg)
+    pspecs = model.specs()
+    n_dev = mesh.devices.size
+    # decode uses the serving sharding rules: read-only params are never
+    # FSDP-gathered; experts spread over the full device set (256-way EP).
+    # Prefill keeps the training rules: its 32k-token batches make the
+    # EP token-replication layout catastrophic (measured: 308 GB/device
+    # temp on deepseek multi-pod prefill -- EXPERIMENTS.md §Perf notes).
+    rules = SERVE_RULES if shape.kind == "decode" else None
+    set_mesh_ctx(mesh, rules)
+
+    p_structs = struct_tree(pspecs, dtype=cfg.param_dtype)
+    p_shard = param_shardings(pspecs, mesh, rules=dict_or_none(rules))
+    t0 = time.time()
+
+    if shape.kind == "train":
+        o_specs = adamw_init_specs(pspecs, tc)
+        o_structs = struct_tree(o_specs, dtype=tc.opt_dtype)
+        o_shard = param_shardings(o_specs, mesh)
+        batch, axes = specs_lib.train_inputs(cfg, shape, tc.grad_accum)
+        b_shard = batch_shardings(axes, batch, mesh)
+        step = make_train_step(model, tc)
+        lowered = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                          donate_argnums=(0, 1)).lower(p_structs, o_structs, batch)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = flops_lib.model_flops_reference(cfg, pspecs, tokens, train=True)
+    elif shape.kind == "prefill":
+        batch, axes = specs_lib.prefill_inputs(cfg, shape)
+        b_shard = batch_shardings(axes, batch, mesh)
+        step = make_prefill_step(model)
+        lowered = jax.jit(step, in_shardings=(p_shard, b_shard["tokens"],
+                                              b_shard.get("img_embeds"),
+                                              b_shard.get("enc_frames"))).lower(
+            p_structs, batch["tokens"], batch.get("img_embeds"), batch.get("enc_frames"))
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = flops_lib.model_flops_reference(cfg, pspecs, tokens, train=False)
+    else:  # decode
+        toks, pos, cache_specs = specs_lib.decode_inputs(cfg, shape)
+        c_structs = struct_tree(cache_specs)
+        c_shard = param_shardings(cache_specs, mesh, rules=dict_or_none(rules))
+        t_shard = NamedSharding(mesh, logical_spec(toks.shape, ("batch", "seq"), mesh))
+        pos_shard = NamedSharding(mesh, logical_spec(pos.shape, ("batch",), mesh))
+        step = make_serve_step(model)
+        lowered = jax.jit(step, in_shardings=(p_shard, c_shard, t_shard, pos_shard),
+                          donate_argnums=(1,)).lower(p_structs, c_structs, toks, pos)
+        tokens = shape.global_batch  # one new token per sequence
+        model_flops = flops_lib.model_flops_reference(cfg, pspecs, tokens, train=False)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    rl, colls = analyze_compiled(compiled, n_dev, model_flops)
+    mem = memory_summary(compiled)
+    rec = {
+        "arch": arch, "shape": shape.name, "mesh": f"{n_dev}dev",
+        "status": "ok", "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem, "collectives": colls, "roofline": rl.to_dict(),
+        "params": flops_lib.total_params(pspecs),
+    }
+    if verbose:
+        print(f"  memory_analysis: {compiled.memory_analysis()}")
+        ca = compiled.cost_analysis() or {}
+        print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}")
+        print(f"  collectives: { {k: (v['count'], f'{v['bytes']:.2e}B') for k, v in colls.items()} }")
+        print(f"  roofline: compute={rl.t_compute*1e3:.1f}ms memory={rl.t_memory*1e3:.1f}ms "
+              f"collective={rl.t_collective*1e3:.1f}ms -> {rl.bottleneck}-bound, "
+              f"useful={rl.useful_flops_ratio:.2f} frac={rl.roofline_fraction:.2f}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/results")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, "dryrun.json")
+    results: Dict[str, Any] = {}
+    if os.path.exists(path):
+        # always load: --force re-runs the SELECTED cells but must never
+        # discard other cells' records
+        with open(path) as f:
+            results = json.load(f)
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_fail = 0
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "2x16x16" if multi_pod else "16x16"
+        for arch in archs:
+            for sname in shapes:
+                key = f"{arch}|{sname}|{mesh_name}"
+                skip = cell_is_skipped(arch, sname)
+                if skip:
+                    results[key] = {"status": "skipped", "reason": skip}
+                    n_skip += 1
+                    continue
+                if key in results and results[key].get("status") == "ok" and not args.force:
+                    n_ok += 1
+                    continue
+                print(f"[dryrun] {key} ...", flush=True)
+                try:
+                    rec = lower_cell(arch, SHAPES[sname], mesh)
+                    rec["mesh"] = mesh_name
+                    results[key] = rec
+                    n_ok += 1
+                    print(f"[dryrun] {key} OK (lower {rec['lower_s']}s, "
+                          f"compile {rec['compile_s']}s)", flush=True)
+                except Exception as e:  # noqa: BLE001 -- failures ARE the signal here
+                    results[key] = {"status": "fail", "error": f"{type(e).__name__}: {e}",
+                                    "traceback": traceback.format_exc()[-2000:]}
+                    n_fail += 1
+                    print(f"[dryrun] {key} FAIL: {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(results, f, indent=1)
+    print(f"[dryrun] done: ok={n_ok} skip={n_skip} fail={n_fail} -> {path}")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

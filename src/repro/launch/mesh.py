@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state -- required for the dry-run's placeholder-device
+bootstrap ordering.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Target topology: one TPU v5e pod = 16x16 = 256 chips, ("data","model");
+    two pods = (2,16,16) with a leading "pod" axis (DP across pods over DCN).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+# hardware constants for the roofline (TPU v5e per chip)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link

@@ -1,0 +1,107 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) cell: weak-type-correct,
+shardable, no device allocation.  Also centralizes the per-arch training
+hyperparameters used by the dry-run (microbatch/grad-accum, optimizer dtype,
+mixed-precision policy for the 100B+ models)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import lm as lm_lib
+from repro.param import Spec
+
+# grad-accum per arch for the train_4k cell: keeps per-device microbatch
+# activations (and the MoE dispatch tensors) inside HBM.
+TRAIN_ACCUM: Dict[str, int] = {
+    "deepseek-v3-671b": 8,
+    "jamba-1.5-large-398b": 8,
+    "command-r-35b": 4,
+    "qwen3-14b": 4,
+    "phi3.5-moe-42b-a6.6b": 4,
+    "llama-3.2-vision-11b": 4,
+    "whisper-large-v3": 2,
+    "qwen3-4b": 2,
+    "tinyllama-1.1b": 2,
+    "xlstm-125m": 1,
+}
+
+# >=100B params: bf16 parameters + bf16 Adam moments (DESIGN.md §8.3);
+# everything else keeps f32 master params / moments.
+BF16_STATE = ("deepseek-v3-671b", "jamba-1.5-large-398b")
+
+
+def train_config_for(cfg: ModelConfig, shape: ShapeConfig) -> TrainConfig:
+    accum = TRAIN_ACCUM.get(cfg.name, 1) if shape.kind == "train" else 1
+    opt_dtype = jnp.bfloat16 if cfg.name in BF16_STATE else jnp.float32
+    # per-step weight pre-gather was measured on qwen3-14b train_4k: it cuts
+    # all-gather OP COUNT 3.2x (latency win at 1000+ nodes) but adds gathered-
+    # copy HBM traffic that worsens the 16x16 memory-bound step (19.5->25.9s)
+    # -- refuted as a default; kept as an option (EXPERIMENTS.md §Perf q.3).
+    return TrainConfig(steps=10000, warmup_steps=500, grad_accum=accum,
+                       opt_dtype=opt_dtype, batch_size=shape.global_batch,
+                       seq_len=shape.seq_len, pregather_params=False)
+
+
+def model_config_for(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    if cfg.name in BF16_STATE and cfg.param_dtype != jnp.bfloat16:
+        cfg = cfg.replace(param_dtype=jnp.bfloat16)
+    if shape.kind == "prefill" and cfg.causal:
+        # no-grad forward: the triangular pairs path is FLOP-exact (the
+        # rectangular flash forward would waste ~2x attention FLOPs).
+        # Context-parallel attention is disabled here: the pairs scan
+        # dynamic-slices q blocks along the sequence, which under a
+        # seq-sharded constraint gathers per block pair (measured 5x
+        # regression on qwen3-14b/whisper prefill).
+        cfg = cfg.replace(attn_impl="pairs", attn_seq_shard=False)
+    return cfg
+
+
+def _tok(shape: Tuple[int, ...]):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig, accum: int):
+    """Returns (struct_tree, axes_tree) for the training batch.
+
+    With accum > 1 the global batch is split into ``accum`` leading
+    microbatches (scanned in the step function)."""
+    B, S = shape.global_batch, shape.seq_len
+    lead: Tuple[int, ...] = (accum, B // accum) if accum > 1 else (B,)
+    lax: Tuple[str, ...] = ("accum", "batch") if accum > 1 else ("batch",)
+    batch = {"tokens": _tok(lead + (S,)), "labels": _tok(lead + (S,))}
+    axes = {"tokens": lax + ("seq",), "labels": lax + ("seq",)}
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.ShapeDtypeStruct(
+            lead + (cfg.n_image_tokens, cfg.vision_dim or cfg.d_model), jnp.bfloat16)
+        axes["img_embeds"] = lax + ("img_seq", "vision_embed")
+    if cfg.family == "audio":
+        batch["enc_frames"] = jax.ShapeDtypeStruct(
+            lead + (cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        axes["enc_frames"] = lax + ("enc_seq", "act_embed")
+    return batch, axes
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {"tokens": _tok((B, S))}
+    axes: Dict[str, Any] = {"tokens": ("batch", "seq")}
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.vision_dim or cfg.d_model), jnp.bfloat16)
+        axes["img_embeds"] = ("batch", "img_seq", "vision_embed")
+    if cfg.family == "audio":
+        batch["enc_frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        axes["enc_frames"] = ("batch", "enc_seq", "act_embed")
+    return batch, axes
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig):
+    """(tokens, pos) structs + the cache Spec tree (specs carry axes/dtypes)."""
+    B = shape.global_batch
+    toks = _tok((B, 1))
+    pos = _tok((B,))
+    cache_specs = lm_lib.cache_specs(cfg, B, shape.seq_len)
+    return toks, pos, cache_specs

@@ -1,0 +1,95 @@
+"""Norms, activations, RoPE, embeddings."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.param import Spec
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+
+def norm_specs(cfg: ModelConfig, axis: str = "embed", dim: int = 0) -> Dict[str, Spec]:
+    d = dim or cfg.d_model
+    out = {"scale": Spec((d,), (axis,), ("out",), init="ones")}
+    if cfg.norm == "layernorm":
+        out["bias"] = Spec((d,), (axis,), ("out",), init="zeros")
+    return out
+
+
+def norm_apply(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D] (D even), positions broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+
+
+def embed_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    out = {"tok": Spec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), ("-", "out"), init="embed")}
+    if not cfg.tie_embeddings:
+        out["head"] = Spec((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"), ("in", "-"), init="fan_in")
+    return out
+
+
+def embed_tokens(p: Dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p["tok"].astype(cfg.compute_dtype)
+    return jnp.take(w, tokens, axis=0)
+
+
+def unembed(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = p["tok"].astype(cfg.compute_dtype)
+        return jnp.einsum("bse,ve->bsv", x, w)
+    w = p["head"].astype(cfg.compute_dtype)
+    return jnp.einsum("bse,ev->bsv", x, w)
+
+
+def pos_embed_specs(max_seq: int, cfg: ModelConfig, axis: str = "seq") -> Dict[str, Spec]:
+    return {"pos": Spec((max_seq, cfg.d_model), (axis, "embed"), ("-", "out"), init="normal", scale=0.02)}

@@ -1,0 +1,136 @@
+"""Dense FFN (SwiGLU / GELU) and Mixture-of-Experts with GShard-style
+capacity-based dispatch (pure jnp + sharding constraints: GSPMD inserts the
+expert-parallel collectives; see DESIGN.md §3)."""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed import shard_l
+from repro.layers.basic import act_fn
+from repro.param import Spec
+
+
+# ---------------------------------------------------------------------------
+# dense FFN
+
+
+def ffn_specs(cfg: ModelConfig, d_ff: int = 0, axis: str = "mlp") -> Dict[str, Spec]:
+    E = cfg.d_model
+    F = d_ff or cfg.d_ff
+    s = {
+        "w_gate": Spec((E, F), ("embed", axis), ("in", "out"), init="fan_in"),
+        "w_up": Spec((E, F), ("embed", axis), ("in", "out"), init="fan_in"),
+        "w_down": Spec((F, E), (axis, "embed"), ("in", "out"), init="fan_in"),
+    }
+    if cfg.act == "gelu":  # classic 2-matrix FFN (BERT/GPT/DeiT/Whisper)
+        s.pop("w_gate")
+    if cfg.use_bias:
+        s["b_up"] = Spec((F,), (axis,), ("out",), init="zeros")
+        s["b_down"] = Spec((E,), ("embed",), ("out",), init="zeros")
+    return s
+
+
+def ffn_apply(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    cdt = cfg.compute_dtype
+    act = act_fn(cfg.act)
+    h = jnp.einsum("bse,ef->bsf", x, p["w_up"].astype(cdt))
+    if cfg.use_bias:
+        h = h + p["b_up"].astype(cdt)
+    if "w_gate" in p:
+        g = jnp.einsum("bse,ef->bsf", x, p["w_gate"].astype(cdt))
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = shard_l(h, ("batch", "seq", "act_mlp"))
+    y = jnp.einsum("bsf,fe->bse", h, p["w_down"].astype(cdt))
+    if cfg.use_bias:
+        y = y + p["b_down"].astype(cdt)
+    return shard_l(y, ("batch", "seq", "act_embed"))
+
+
+# ---------------------------------------------------------------------------
+# MoE
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    E, X, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff or cfg.d_ff
+    s = {
+        "router": Spec((E, X), ("embed", "experts"), ("in", "-"), init="normal", scale=0.02),
+        "w_gate": Spec((X, E, F), ("experts", "embed", "moe_mlp"), ("-", "in", "out"), init="fan_in"),
+        "w_up": Spec((X, E, F), ("experts", "embed", "moe_mlp"), ("-", "in", "out"), init="fan_in"),
+        "w_down": Spec((X, F, E), ("experts", "moe_mlp", "embed"), ("-", "in", "out"), init="fan_in"),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * (cfg.moe_d_ff or cfg.d_ff)
+        s["shared"] = ffn_specs(cfg, d_ff=Fs, axis="shared_mlp")
+    return s
+
+
+def moe_capacity(cfg: ModelConfig, seq: int) -> int:
+    X, k = cfg.n_experts, cfg.moe_top_k
+    cap = int(math.ceil(seq * k * cfg.capacity_factor / X))
+    return max(cap, 4)
+
+
+def moe_apply(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_load_balance_loss).
+
+    Group = one batch row (GShard grouping): position-in-expert is a cumsum
+    along the sequence, so capacity bookkeeping never crosses shards.
+    """
+    B, S, E = x.shape
+    X, k = cfg.n_experts, cfg.moe_top_k
+    C = moe_capacity(cfg, S)
+    cdt = cfg.compute_dtype
+    act = act_fn(cfg.act)
+
+    logits = jnp.einsum("bse,ex->bsx", x, p["router"].astype(cdt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # [B,S,X]
+    gate_vals, idx = jax.lax.top_k(probs, k)  # [B,S,k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): X * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))  # [X]
+    onehot_top1 = jax.nn.one_hot(idx[..., 0], X, dtype=jnp.float32)
+    ce = jnp.mean(onehot_top1, axis=(0, 1))
+    aux = X * jnp.sum(me * ce)
+
+    # capacity-based dispatch: for each of the k slots, position-in-expert is a
+    # cumulative count along S (per batch-row group).  The [B,S,X,C] combine
+    # tensor is kept in compute dtype (values are exact gate weights / zeros);
+    # position bookkeeping stays in f32 (counts up to S exceed bf16 integers).
+    combine = jnp.zeros((B, S, X, C), cdt)
+    prior = jnp.zeros((B, X), jnp.float32)  # tokens already assigned per expert
+    for slot in range(k):
+        oh = jax.nn.one_hot(idx[..., slot], X, dtype=jnp.float32)  # [B,S,X]
+        pos = jnp.cumsum(oh, axis=1) - oh + prior[:, None, :]  # [B,S,X]
+        prior = prior + jnp.sum(oh, axis=1)
+        keep = (pos < C) & (oh > 0)
+        w = jnp.where(keep, gate_vals[..., slot, None], 0.0).astype(cdt)  # [B,S,X]
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=cdt)  # [B,S,X,C]
+        combine = combine + w[..., None] * pos_oh
+
+    combine = shard_l(combine, ("batch", "seq", "act_experts", "capacity"))
+    dispatch = (combine > 0).astype(cdt)
+
+    xb = jnp.einsum("bsxc,bse->bxce", dispatch, x)
+    # two-hop reshard: (B:data, X:model) first, then the full-EP layout --
+    # gives GSPMD an all-to-all path instead of replicate-and-repartition
+    xb = shard_l(xb, ("batch", "act_experts_mid", "capacity", "act_embed"))
+    xb = shard_l(xb, ("moe_batch", "act_experts", "capacity", "act_embed"))
+    g = jnp.einsum("bxce,xef->bxcf", xb, p["w_gate"].astype(cdt))
+    u = jnp.einsum("bxce,xef->bxcf", xb, p["w_up"].astype(cdt))
+    h = act(g) * u
+    yb = jnp.einsum("bxcf,xfe->bxce", h, p["w_down"].astype(cdt))
+    yb = shard_l(yb, ("moe_batch", "act_experts", "capacity", "act_embed"))
+    yb = shard_l(yb, ("batch", "act_experts_mid", "capacity", "act_embed"))
+    y = jnp.einsum("bsxc,bxce->bse", combine.astype(cdt), yb)
+
+    if cfg.n_shared_experts:
+        y = y + ffn_apply(p["shared"], x, cfg)
+    return shard_l(y, ("batch", "seq", "act_embed")), aux

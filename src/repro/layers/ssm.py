@@ -1,0 +1,347 @@
+"""Recurrent mixers: Mamba (selective SSM, Jamba-style) and xLSTM (sLSTM/mLSTM).
+
+Width-coalescing compatibility: all hidden projections are *head-structured*
+([..., heads, head_sub]) so the paper's whole-head merging applies; the
+state-transition axes (d_state, conv taps, per-head matrix memory) are
+protected from width coalescing (DESIGN.md §4).
+
+Training uses ``lax.scan`` over time with per-step state materialization only
+(never [B,S,d_inner,d_state]); decode is a single-step state update (O(1) per
+token -> these are the `long_500k`-capable families).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed import shard_l
+from repro.param import Spec
+
+
+def chunked_scan(step, init, xs, chunk: int):
+    """``lax.scan`` with per-chunk rematerialization.
+
+    A plain differentiated scan stores every per-step residual: for Mamba at
+    train_4k that is O(S * B * d_inner * d_state) -- terabytes per device (the
+    xlstm/jamba baseline dry-run measured it; EXPERIMENTS.md §Perf).  Scanning
+    checkpointed chunks stores only chunk-boundary states and recomputes the
+    inner steps in the backward pass: memory / (S/chunk), +1 extra forward.
+    """
+    S = jax.tree.leaves(xs)[0].shape[0]
+    if chunk <= 1 or S <= chunk or S % chunk:
+        return jax.lax.scan(step, init, xs)
+    n = S // chunk
+    xs_c = jax.tree.map(lambda x: x.reshape((n, chunk) + x.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_body(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    carry, ys = jax.lax.scan(chunk_body, init, xs_c)
+    ys = jax.tree.map(lambda y: y.reshape((S,) + y.shape[2:]), ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM)
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    E, di, ds = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state
+    dk, dtr = cfg.mamba_d_conv, cfg.resolved_dt_rank
+    return {
+        "w_in_x": Spec((E, di), ("embed", "mamba_inner"), ("in", "out"), init="fan_in"),
+        "w_in_z": Spec((E, di), ("embed", "mamba_inner"), ("in", "out"), init="fan_in"),
+        "conv_w": Spec((dk, di), ("conv_k", "mamba_inner"), ("-", "out"), init="normal", scale=0.1),
+        "conv_b": Spec((di,), ("mamba_inner",), ("out",), init="zeros"),
+        "w_B": Spec((di, ds), ("mamba_inner", "mamba_state"), ("in", "-"), init="fan_in"),
+        "w_C": Spec((di, ds), ("mamba_inner", "mamba_state"), ("in", "-"), init="fan_in"),
+        "w_dt": Spec((di, dtr), ("mamba_inner", "dt_rank"), ("in", "out"), init="fan_in"),
+        "dt_proj": Spec((dtr, di), ("dt_rank", "mamba_inner"), ("in", "out"), init="fan_in"),
+        "dt_bias": Spec((di,), ("mamba_inner",), ("out",), init="mamba_dt"),
+        "A_log": Spec((di, ds), ("mamba_inner", "mamba_state"), ("out", "-"), init="mamba_A"),
+        "D": Spec((di,), ("mamba_inner",), ("out",), init="ones"),
+        "w_out": Spec((di, E), ("mamba_inner", "embed"), ("in", "out"), init="fan_in"),
+    }
+
+
+def mamba_cache_specs(cfg: ModelConfig, batch: int) -> Dict[str, Spec]:
+    di, ds, dk = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    import jax.numpy as _jnp
+    return {
+        "conv": Spec((batch, dk - 1, di), ("batch", "conv_k", "act_mamba"), init="zeros",
+                     dtype=cfg.compute_dtype),
+        "h": Spec((batch, di, ds), ("batch", "act_mamba", "mamba_state"), init="zeros",
+                  dtype=_jnp.float32),
+    }
+
+
+def _mamba_inner(p: Dict, x_c, z, cfg: ModelConfig, h0):
+    """x_c: [B,S,di] post-conv activations. Returns (y [B,S,di], h_last).
+
+    Chunked selective scan: the discretized (dA, dBx) are precomputed PER
+    CHUNK and fed to the inner scan as xs.  Two reasons (EXPERIMENTS.md §Perf
+    jamba iterations):
+      * memory: per-chunk remat keeps residuals at [B, chunk, di, ds] instead
+        of [B, S, di, ds];
+      * collectives: if ``A`` is closed over inside the step, its gradient
+        contracts the data-sharded batch axis EVERY timestep -> one
+        all-reduce per step (4.1M on jamba train_4k).  With chunk-level
+        precompute the parameter-gradient reductions happen once per chunk.
+    """
+    B, S, di = x_c.shape
+    ds = cfg.mamba_d_state
+    cdt = cfg.compute_dtype
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [di,ds]
+    B_ = jnp.einsum("bsd,dn->bsn", x_c, p["w_B"].astype(cdt))
+    C_ = jnp.einsum("bsd,dn->bsn", x_c, p["w_C"].astype(cdt))
+    dt = jnp.einsum("bsd,dr->bsr", x_c, p["w_dt"].astype(cdt))
+    dt = jnp.einsum("bsr,rd->bsd", dt, p["dt_proj"].astype(cdt)) + p["dt_bias"].astype(cdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))  # [B,S,di]
+
+    state_ax = ("batch", "act_mamba", "mamba_state")
+
+    def step(h, xs):
+        dA_t, dBx_t = xs  # [B,di,ds],[B,di,ds]
+        h = shard_l(dA_t * h + dBx_t, state_ax)
+        return h, h
+
+    def run_chunk(h, xs_chunk):
+        # The y_t = <h_t, C_t> contraction happens PER CHUNK, not per step:
+        # its backward reduces over the model-sharded d_inner axis, which as a
+        # per-step op emitted one all-reduce per token (2.1M on jamba train).
+        xc, dtc, Bc, Cc = xs_chunk  # [B,c,...]
+        dA = jnp.exp(dtc[..., None] * A[None, None])  # [B,c,di,ds]
+        dBx = (dtc * xc.astype(jnp.float32))[..., None] * Bc.astype(jnp.float32)[:, :, None, :]
+        h, hs = jax.lax.scan(step, h, (dA.swapaxes(0, 1), dBx.swapaxes(0, 1)))
+        yc = jnp.einsum("tbdn,btn->tbd", hs, Cc.astype(jnp.float32))  # [c,B,di]
+        return h, yc.astype(cdt)
+
+    c = cfg.ssm_chunk
+    if c > 1 and S > c and S % c == 0:
+        n = S // c
+        xs_all = tuple(a.reshape((B, n, c) + a.shape[2:]).swapaxes(0, 1)
+                       for a in (x_c, dt, B_, C_))
+        h_last, ys = jax.lax.scan(jax.checkpoint(run_chunk), h0, xs_all)
+        y = ys.reshape(S, B, di)  # [n,c,B,di] -> [S,B,di] (chunk-major order)
+    else:
+        h_last, ys = run_chunk(h0, (x_c, dt, B_, C_))
+        y = ys
+    y = y.swapaxes(0, 1)  # [B,S,di]
+    y = y + p["D"].astype(cdt) * x_c
+    y = y * jax.nn.silu(z)
+    return y, h_last
+
+
+def mamba_apply(
+    p: Dict, x: jax.Array, cfg: ModelConfig, cache: Optional[Dict] = None,
+    return_state: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, E = x.shape
+    di, ds, dk = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    cdt = cfg.compute_dtype
+    x_in = jnp.einsum("bse,ed->bsd", x, p["w_in_x"].astype(cdt))
+    z = jnp.einsum("bse,ed->bsd", x, p["w_in_z"].astype(cdt))
+    x_in = shard_l(x_in, ("batch", "seq", "act_mamba"))
+    z = shard_l(z, ("batch", "seq", "act_mamba"))
+    cw = p["conv_w"].astype(cdt)  # [dk, di]
+
+    if cache is None:
+        # causal depthwise conv over the sequence
+        xp = jnp.pad(x_in, ((0, 0), (dk - 1, 0), (0, 0)))
+        x_c = jax.lax.conv_general_dilated(
+            xp, cw[:, None, :], window_strides=(1,), padding="VALID",
+            dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=di)
+        x_c = jax.nn.silu(x_c + p["conv_b"].astype(cdt))
+        h0 = shard_l(jnp.zeros((B, di, ds), jnp.float32),
+                     ("batch", "act_mamba", "mamba_state"))
+        y, h_last = _mamba_inner(p, x_c, z, cfg, h0)
+        new_cache = None
+        if return_state:  # prefill: conv tail + final SSM state
+            tail = xp[:, xp.shape[1] - (dk - 1):, :]
+            new_cache = {"conv": tail, "h": h_last}
+    else:
+        # single-token decode: rolling conv window + one state update
+        window = jnp.concatenate([cache["conv"].astype(cdt), x_in], axis=1)  # [B,dk,di]
+        x_c = jnp.einsum("bkd,kd->bd", window, cw)[:, None, :]
+        x_c = jax.nn.silu(x_c + p["conv_b"].astype(cdt))
+        h0 = shard_l(cache["h"].astype(jnp.float32),
+                     ("batch", "act_mamba", "mamba_state"))
+        y, h_last = _mamba_inner(p, x_c, z, cfg, h0)
+        new_cache = {"conv": window[:, 1:, :], "h": h_last}
+
+    out = jnp.einsum("bsd,de->bse", y, p["w_out"].astype(cdt))
+    return shard_l(out, ("batch", "seq", "act_embed")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) and sLSTM (scalar memory with recurrence)
+
+
+def _xlstm_dims(cfg: ModelConfig, kind: str) -> Tuple[int, int]:
+    NH = cfg.n_heads
+    if kind == "mlstm":
+        d_in = int(cfg.xlstm_proj_factor * cfg.d_model)
+    else:
+        d_in = cfg.d_model
+    return NH, d_in // NH
+
+
+def mlstm_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    E = cfg.d_model
+    NH, dh = _xlstm_dims(cfg, "mlstm")
+    hax = "xlstm_head"
+    return {
+        "w_up": Spec((E, NH, dh), ("embed", "heads", hax), ("in", "out", "-"), init="fan_in"),
+        "w_z": Spec((E, NH, dh), ("embed", "heads", hax), ("in", "out", "-"), init="fan_in"),
+        "wq": Spec((NH, dh, dh), ("heads", hax, hax), ("out", "-", "-"), init="fan_in"),
+        "wk": Spec((NH, dh, dh), ("heads", hax, hax), ("out", "-", "-"), init="fan_in"),
+        "wv": Spec((NH, dh, dh), ("heads", hax, hax), ("out", "-", "-"), init="fan_in"),
+        "w_i": Spec((NH, dh), ("heads", hax), ("out", "-"), init="normal", scale=0.02),
+        "w_f": Spec((NH, dh), ("heads", hax), ("out", "-"), init="normal", scale=0.02),
+        "b_i": Spec((NH,), ("heads",), ("out",), init="zeros"),
+        "b_f": Spec((NH,), ("heads",), ("out",), init="ones"),  # bias toward remembering
+        "w_down": Spec((NH, dh, E), ("heads", hax, "embed"), ("in", "-", "out"), init="fan_in"),
+    }
+
+
+def mlstm_cache_specs(cfg: ModelConfig, batch: int) -> Dict[str, Spec]:
+    NH, dh = _xlstm_dims(cfg, "mlstm")
+    f32 = jnp.float32
+    return {
+        "C": Spec((batch, NH, dh, dh), ("batch", "act_xlstm", "xlstm_head", "xlstm_head"),
+                  init="zeros", dtype=f32),
+        "n": Spec((batch, NH, dh), ("batch", "act_xlstm", "xlstm_head"), init="zeros", dtype=f32),
+        "m": Spec((batch, NH), ("batch", "act_xlstm"), init="zeros", dtype=f32),
+    }
+
+
+def mlstm_apply(
+    p: Dict, x: jax.Array, cfg: ModelConfig, cache: Optional[Dict] = None,
+    return_state: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, E = x.shape
+    NH, dh = _xlstm_dims(cfg, "mlstm")
+    cdt = cfg.compute_dtype
+    xi = jnp.einsum("bse,ehd->bshd", x, p["w_up"].astype(cdt))  # [B,S,NH,dh]
+    z = jnp.einsum("bse,ehd->bshd", x, p["w_z"].astype(cdt))
+    q = jnp.einsum("bshd,hdk->bshk", xi, p["wq"].astype(cdt))
+    k = jnp.einsum("bshd,hdk->bshk", xi, p["wk"].astype(cdt)) * (dh ** -0.5)
+    v = jnp.einsum("bshd,hdk->bshk", xi, p["wv"].astype(cdt))
+    ig = jnp.einsum("bshd,hd->bsh", xi, p["w_i"].astype(cdt)).astype(jnp.float32) + p["b_i"].astype(jnp.float32)
+    fg = jnp.einsum("bshd,hd->bsh", xi, p["w_f"].astype(cdt)).astype(jnp.float32) + p["b_f"].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(fg)  # stabilized exponential gating
+
+    if cache is None:
+        C0 = shard_l(jnp.zeros((B, NH, dh, dh), jnp.float32),
+                     ("batch", "act_xlstm", "xlstm_head", "xlstm_head"))
+        n0 = shard_l(jnp.zeros((B, NH, dh), jnp.float32),
+                     ("batch", "act_xlstm", "xlstm_head"))
+        m0 = jnp.full((B, NH), -1e30, jnp.float32)
+    else:
+        C0 = cache["C"].astype(jnp.float32)
+        n0 = cache["n"].astype(jnp.float32)
+        m0 = cache["m"].astype(jnp.float32)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, lft = xs
+        m_new = jnp.maximum(lft + m, it)
+        i_p = jnp.exp(it - m_new)[..., None]  # [B,NH,1]
+        f_p = jnp.exp(lft + m - m_new)[..., None]
+        kf = kt.astype(jnp.float32)
+        vf = vt.astype(jnp.float32)
+        C = shard_l(f_p[..., None] * C + i_p[..., None] * (vf[..., :, None] * kf[..., None, :]),
+                    ("batch", "act_xlstm", "xlstm_head", "xlstm_head"))
+        n = shard_l(f_p * n + i_p * kf, ("batch", "act_xlstm", "xlstm_head"))
+        qf = qt.astype(jnp.float32)
+        num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)), 1.0)[..., None]
+        h = (num / den).astype(cdt)
+        return (C, n, m_new), h
+
+    xs = tuple(a.swapaxes(0, 1) for a in (q, k, v, ig, log_f))
+    (C, n, m), hs = chunked_scan(step, (C0, n0, m0), xs, cfg.ssm_chunk)
+    h = hs.swapaxes(0, 1)  # [B,S,NH,dh]
+    h = h * jax.nn.silu(z)
+    y = jnp.einsum("bshd,hde->bse", h, p["w_down"].astype(cdt))
+    new_cache = {"C": C, "n": n, "m": m} if (cache is not None or return_state) else None
+    return shard_l(y, ("batch", "seq", "act_embed")), new_cache
+
+
+def slstm_specs(cfg: ModelConfig) -> Dict[str, Spec]:
+    E = cfg.d_model
+    NH, dh = _xlstm_dims(cfg, "slstm")
+    hax = "slstm_head"
+    s = {}
+    for g in ("z", "i", "f", "o"):
+        s[f"w_{g}"] = Spec((E, NH, dh), ("embed", "heads", hax), ("in", "out", "-"), init="fan_in")
+        s[f"r_{g}"] = Spec((NH, dh, dh), ("heads", hax, hax), ("out", "-", "-"), init="fan_in")
+        s[f"b_{g}"] = Spec((NH, dh), ("heads", hax), ("out", "-"),
+                           init="ones" if g == "f" else "zeros")
+    s["w_down"] = Spec((NH, dh, E), ("heads", hax, "embed"), ("in", "-", "out"), init="fan_in")
+    return s
+
+
+def slstm_cache_specs(cfg: ModelConfig, batch: int) -> Dict[str, Spec]:
+    NH, dh = _xlstm_dims(cfg, "slstm")
+    ax = ("batch", "act_xlstm", "slstm_head")
+    f32 = jnp.float32
+    return {
+        "c": Spec((batch, NH, dh), ax, init="zeros", dtype=f32),
+        "n": Spec((batch, NH, dh), ax, init="zeros", dtype=f32),
+        "h": Spec((batch, NH, dh), ax, init="zeros", dtype=f32),
+        "m": Spec((batch, NH, dh), ax, init="zeros", dtype=f32),
+    }
+
+
+def slstm_apply(
+    p: Dict, x: jax.Array, cfg: ModelConfig, cache: Optional[Dict] = None,
+    return_state: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    B, S, E = x.shape
+    NH, dh = _xlstm_dims(cfg, "slstm")
+    cdt = cfg.compute_dtype
+    pre = {g: jnp.einsum("bse,ehd->bshd", x, p[f"w_{g}"].astype(cdt)) for g in ("z", "i", "f", "o")}
+
+    if cache is None:
+        c0 = jnp.zeros((B, NH, dh), jnp.float32)
+        n0 = jnp.zeros((B, NH, dh), jnp.float32)
+        h0 = jnp.zeros((B, NH, dh), jnp.float32)
+        m0 = jnp.full((B, NH, dh), -1e30, jnp.float32)
+    else:
+        c0, n0, h0, m0 = (cache[k].astype(jnp.float32) for k in ("c", "n", "h", "m"))
+
+    r = {g: p[f"r_{g}"].astype(jnp.float32) for g in ("z", "i", "f", "o")}
+    b = {g: p[f"b_{g}"].astype(jnp.float32) for g in ("z", "i", "f", "o")}
+
+    def step(carry, xs):
+        c, n, h, m = carry
+        zx, ix, fx, ox = (t.astype(jnp.float32) for t in xs)
+
+        def rec(g, inp):
+            return inp + jnp.einsum("bhd,hdk->bhk", h, r[g]) + b[g]
+
+        zt = jnp.tanh(rec("z", zx))
+        it = rec("i", ix)
+        ft = rec("f", fx)
+        ot = jax.nn.sigmoid(rec("o", ox))
+        log_f = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(log_f + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        c = shard_l(f_p * c + i_p * zt, ("batch", "act_xlstm", "slstm_head"))
+        n = f_p * n + i_p
+        h_new = ot * c / jnp.maximum(n, 1.0)
+        return (c, n, h_new, m_new), h_new.astype(cdt)
+
+    xs = tuple(pre[g].swapaxes(0, 1) for g in ("z", "i", "f", "o"))
+    (c, n, h, m), hs = chunked_scan(step, (c0, n0, h0, m0), xs, cfg.ssm_chunk)
+    hseq = hs.swapaxes(0, 1)  # [B,S,NH,dh]
+    y = jnp.einsum("bshd,hde->bse", hseq, p["w_down"].astype(cdt))
+    new_cache = ({"c": c, "n": n, "h": h, "m": m}
+                 if (cache is not None or return_state) else None)
+    return shard_l(y, ("batch", "seq", "act_embed")), new_cache

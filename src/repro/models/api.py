@@ -1,0 +1,185 @@
+"""Public model facade + step builders (train / prefill / decode).
+
+``Model`` wraps a ModelConfig with spec/init/loss/forward entry points used by
+the V-cycle runner, the baselines, the launcher and the dry-run.  Step builders
+return pure functions suitable for ``jax.jit`` (and ``.lower().compile()``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.models import lm as lm_lib
+from repro.models import vit as vit_lib
+from repro.optim import adamw_init, adamw_init_specs, adamw_update
+from repro.param import init_tree
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # -- specs / init ------------------------------------------------------
+    def specs(self):
+        if self.cfg.family == "vit":
+            return vit_lib.vit_specs(self.cfg)
+        return lm_lib.lm_specs(self.cfg)
+
+    def cache_specs(self, batch: int, max_seq: int):
+        return lm_lib.cache_specs(self.cfg, batch, max_seq)
+
+    def init(self, key: jax.Array):
+        return init_tree(key, self.specs(), dtype=self.cfg.param_dtype)
+
+    # -- losses ------------------------------------------------------------
+    def loss(self, params, batch: Dict[str, jax.Array], z_loss: float = 0.0):
+        cfg = self.cfg
+        if cfg.family == "vit":
+            logits = vit_lib.vit_forward(params, batch["patches"], cfg)
+            return vit_lib.vit_loss(logits, batch["labels"])
+        out = lm_lib.lm_forward(
+            params, batch["tokens"], cfg, mode="train",
+            img_embeds=batch.get("img_embeds"), enc_frames=batch.get("enc_frames"))
+        mtp_labels = None
+        if cfg.mtp_depth:
+            lbl = batch["labels"]
+            mtp_labels = jnp.concatenate(
+                [lbl[:, 1:], jnp.full_like(lbl[:, :1], -1)], axis=1)
+        return lm_lib.lm_loss(out["logits"], batch["labels"], cfg, out["aux"],
+                              out.get("mtp_logits"), mtp_labels, z_loss)
+
+    def forward_logits(self, params, batch):
+        if self.cfg.family == "vit":
+            return vit_lib.vit_forward(params, batch["patches"], self.cfg)
+        return lm_lib.lm_forward(params, batch["tokens"], self.cfg, mode="train",
+                                 img_embeds=batch.get("img_embeds"),
+                                 enc_frames=batch.get("enc_frames"))["logits"]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+
+
+def make_train_step(model: Model, tc: TrainConfig) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With ``tc.grad_accum > 1`` the batch leaves must have a leading microbatch
+    axis of size grad_accum; gradients are accumulated with a scan (activation
+    memory divided by grad_accum — the standard TPU pipelining lever).
+    """
+
+    def loss_fn(params, micro):
+        loss, metrics = model.loss(params, micro, z_loss=tc.z_loss)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    # Per-step FSDP weight pre-gather (MaxText-style): cast the f32 master
+    # params to compute dtype ONCE per step with the data-axis sharding
+    # dropped -- the all-gather then happens outside the grad-accum loop
+    # instead of once per layer *per microbatch* (EXPERIMENTS.md §Perf
+    # qwen3-14b iter).  The VJP of the constraint+cast is exactly the f32
+    # gradient reduce-scatter back onto the FSDP layout.  Opt-in per arch:
+    # the per-device gathered copy is total_bf16/model_shard, too large for
+    # the 400B+ models (they keep per-layer gathering).
+    if tc.pregather_params:
+        from repro.distributed import shard_l
+        from repro.param import axes_tree
+
+        p_axes = axes_tree(model.specs())
+        no_fsdp = {"embed": None, "embed_cat2": None}
+
+        def pregather(params):
+            return jax.tree.map(
+                lambda p, ax: shard_l(p.astype(model.cfg.compute_dtype), ax, no_fsdp),
+                params, p_axes)
+    else:
+        pregather = lambda params: params
+
+    def train_step(params, opt_state, batch):
+        if tc.pregather_params:
+            p_use, pull = jax.vjp(pregather, params)
+        else:
+            p_use, pull = params, None
+
+        if tc.grad_accum > 1:
+            def acc_body(carry, micro):
+                g_acc, m_acc = carry
+                (_, metrics), grads = grad_fn(p_use, micro)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, grads)
+                m_acc = jax.tree.map(lambda a, b: a + b, m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            (_, m0), g0 = grad_fn(p_use, jax.tree.map(lambda x: x[0], batch))
+            g0 = jax.tree.map(lambda g: g.astype(jnp.float32), g0)
+            rest = jax.tree.map(lambda x: x[1:], batch)
+            (g_sum, m_sum), _ = jax.lax.scan(acc_body, (g0, m0), rest)
+            inv = 1.0 / tc.grad_accum
+            grads = jax.tree.map(lambda g: g * inv, g_sum)
+            metrics = jax.tree.map(lambda m: m * inv, m_sum)
+        else:
+            (_, metrics), grads = grad_fn(p_use, batch)
+        if pull is not None:
+            # one reduce-scatter back onto the FSDP layout per step
+            grads = pull(jax.tree.map(
+                lambda g, p: g.astype(p.dtype), grads, p_use))[0]
+        params, opt_state, om = adamw_update(params, grads, opt_state, tc)
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def make_eval_loss(model: Model) -> Callable:
+    def eval_loss(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return metrics
+
+    return eval_loss
+
+
+def make_prefill_step(model: Model) -> Callable:
+    """prefill_step(params, tokens, [extras]) -> (last_logits, caches)."""
+    cfg = model.cfg
+
+    def prefill_step(params, tokens, img_embeds=None, enc_frames=None):
+        out = lm_lib.lm_forward(params, tokens, cfg, mode="prefill",
+                                img_embeds=img_embeds, enc_frames=enc_frames)
+        return out["logits"][:, -1, :], out["caches"]
+
+    return prefill_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    """serve_step(params, caches, tokens [B,1], pos [B]) -> (logits, caches).
+
+    One new token against a KV/state cache of ``max_seq`` (the decode_* and
+    long_* assigned shapes lower exactly this function).
+    """
+    cfg = model.cfg
+
+    def serve_step(params, caches, tokens, pos):
+        positions = pos[:, None]
+        out = lm_lib.lm_forward(params, tokens, cfg, positions=positions,
+                                mode="decode", caches=caches)
+        return out["logits"][:, -1, :], out["caches"]
+
+    return serve_step
+
+
+def init_train_state(model: Model, tc: TrainConfig, key: jax.Array):
+    params = model.init(key)
+    opt_state = adamw_init(params, tc)
+    return params, opt_state
+
+
+def train_state_specs(model: Model, tc: TrainConfig):
+    ps = model.specs()
+    return ps, adamw_init_specs(ps, tc)

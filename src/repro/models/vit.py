@@ -1,0 +1,67 @@
+"""ViT / DeiT-style classifier on (stub) patch embeddings — used by the paper's
+DeiT-B reproduction benchmarks (Table 3) and as an encoder-family exemplar."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import BlockSpec, ModelConfig
+from repro.distributed import shard_l
+from repro.layers.basic import norm_apply, norm_specs
+from repro.models.lm import _stack, block_specs, run_stages
+from repro.param import Spec
+
+
+def n_patches(cfg: ModelConfig) -> int:
+    return (cfg.image_size // cfg.patch_size) ** 2
+
+
+def patch_dim(cfg: ModelConfig) -> int:
+    return cfg.patch_size * cfg.patch_size * 3
+
+
+def vit_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    N = n_patches(cfg)
+    return {
+        "patch_proj": Spec((patch_dim(cfg), cfg.d_model), ("patch", "embed"), ("-", "out"),
+                           init="fan_in"),
+        "cls": Spec((1, cfg.d_model), ("seq", "embed"), ("-", "out"), init="normal", scale=0.02),
+        "pos": Spec((N + 1, cfg.d_model), ("seq", "embed"), ("-", "out"), init="normal", scale=0.02),
+        "stages": {
+            f"stage_{i}": {
+                f"b{j}": _stack(block_specs(cfg, bsj), st.repeats)
+                for j, bsj in enumerate(st.pattern)
+            }
+            for i, st in enumerate(cfg.stages)
+        },
+        "final_norm": norm_specs(cfg),
+        "head": Spec((cfg.d_model, cfg.n_classes), ("embed", "classes"), ("in", "-"),
+                     init="fan_in"),
+    }
+
+
+def vit_forward(params: Dict, patches: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """patches: [B, N, patch_dim] -> logits [B, n_classes]."""
+    B, N, _ = patches.shape
+    cdt = cfg.compute_dtype
+    x = jnp.einsum("bnp,pe->bne", patches.astype(cdt), params["patch_proj"].astype(cdt))
+    cls = jnp.broadcast_to(params["cls"].astype(cdt), (B, 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], axis=1)
+    x = x + params["pos"].astype(cdt)[None, : N + 1]
+    x = shard_l(x, ("batch", "seq", "act_embed"))
+    positions = jnp.broadcast_to(jnp.arange(N + 1)[None], (B, N + 1))
+    x, _, _ = run_stages(params["stages"], cfg.stages, x, cfg,
+                         positions=positions, mode="train")
+    x = norm_apply(params["final_norm"], x, cfg)
+    logits = jnp.einsum("be,ec->bc", x[:, 0], params["head"].astype(cdt))
+    return logits.astype(jnp.float32)
+
+
+def vit_loss(logits: jax.Array, labels: jax.Array):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - ll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc}

@@ -1,0 +1,75 @@
+"""Shared tiny configs for tests."""
+import jax.numpy as jnp
+
+from repro.config import BlockSpec, ModelConfig, Stage, TrainConfig, uniform_stages
+
+
+def tiny_dense(**kw) -> ModelConfig:
+    base = dict(name="t-dense", family="dense", d_model=64, n_heads=4, n_kv_heads=2,
+                d_ff=128, vocab_size=256, stages=uniform_stages(3, BlockSpec("attn", "dense")),
+                qk_norm=True, remat="none", attn_impl="plain")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def tiny_moe(**kw) -> ModelConfig:
+    return tiny_dense(name="t-moe", family="moe", n_experts=4, moe_top_k=2, moe_d_ff=64,
+                      n_shared_experts=1,
+                      stages=(Stage((BlockSpec("attn", "dense"),), 1),
+                              Stage((BlockSpec("attn", "moe"),), 2)), **kw)
+
+
+def tiny_mla(**kw) -> ModelConfig:
+    return tiny_dense(name="t-mla", family="moe", attn_type="mla", q_lora_rank=32,
+                      kv_lora_rank=16, qk_nope_head_dim=16, qk_rope_head_dim=8,
+                      v_head_dim=16, qk_norm=False, n_kv_heads=4, **kw)
+
+
+def tiny_hybrid(**kw) -> ModelConfig:
+    return tiny_dense(name="t-hyb", family="hybrid",
+                      stages=(Stage((BlockSpec("mamba", "dense"), BlockSpec("attn", "dense")), 2),),
+                      **kw)
+
+
+def tiny_xlstm(**kw) -> ModelConfig:
+    return tiny_dense(name="t-xl", family="ssm", n_kv_heads=4,
+                      stages=(Stage((BlockSpec("mlstm", "none"), BlockSpec("slstm", "none")), 2),),
+                      **kw)
+
+
+def tiny_vlm(**kw) -> ModelConfig:
+    return tiny_dense(name="t-vlm", family="vlm", n_image_tokens=8,
+                      stages=(Stage((BlockSpec("cross_attn", "dense"),
+                                     BlockSpec("attn", "dense")), 2),), **kw)
+
+
+def tiny_audio(**kw) -> ModelConfig:
+    return tiny_dense(name="t-audio", family="audio", n_encoder_layers=2, encoder_seq=12,
+                      act="gelu", norm="layernorm", n_kv_heads=4, use_bias=True,
+                      stages=uniform_stages(2, BlockSpec("dec_attn", "dense")), **kw)
+
+
+def fast_tc(steps=5, **kw) -> TrainConfig:
+    base = dict(steps=steps, warmup_steps=1, peak_lr=1e-3, batch_size=2, seq_len=16,
+                log_every=1)
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+ALL_FAMILIES = {
+    "dense": tiny_dense, "moe": tiny_moe, "mla": tiny_mla, "hybrid": tiny_hybrid,
+    "xlstm": tiny_xlstm, "vlm": tiny_vlm, "audio": tiny_audio,
+}
+
+
+def batch_for(cfg: ModelConfig, B=2, S=16):
+    import jax.numpy as jnp
+
+    b = {"tokens": (jnp.arange(B * S, dtype=jnp.int32).reshape(B, S) % 250),
+         "labels": (jnp.arange(B * S, dtype=jnp.int32).reshape(B, S) % 250)}
+    if cfg.family == "vlm":
+        b["img_embeds"] = jnp.ones((B, cfg.n_image_tokens, cfg.vision_dim or cfg.d_model),
+                                   jnp.float32) * 0.1
+    if cfg.family == "audio":
+        b["enc_frames"] = jnp.ones((B, cfg.encoder_seq, cfg.d_model), jnp.float32) * 0.1
+    return b

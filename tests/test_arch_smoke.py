@@ -1,0 +1,109 @@
+"""Per-assigned-architecture smoke tests: instantiate the REDUCED same-family
+config, run one forward/train step on CPU, assert output shapes + no NaNs;
+plus one decode step against a small cache (the serve path of the decode
+cells).  FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import fast_tc
+from repro.configs import ASSIGNED, get_config
+from repro.models import lm as lm_lib
+from repro.models.api import build_model, init_train_state, make_serve_step, make_train_step
+from repro.param import is_spec
+
+
+def smoke_batch(cfg, B=2, S=16):
+    b = {"tokens": jnp.ones((B, S), jnp.int32) * 3,
+         "labels": jnp.ones((B, S), jnp.int32) * 5}
+    if cfg.family == "vlm":
+        b["img_embeds"] = 0.1 * jnp.ones((B, cfg.n_image_tokens, cfg.vision_dim or cfg.d_model),
+                                         jnp.float32)
+    if cfg.family == "audio":
+        b["enc_frames"] = 0.1 * jnp.ones((B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.name == get_config(arch).name  # same family/identity
+    tc = fast_tc()
+    model = build_model(cfg)
+    params, opt = init_train_state(model, tc, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, tc))
+    batch = smoke_batch(cfg)
+    params, opt, metrics = step(params, opt, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), f"{arch}: non-finite loss"
+    logits = model.forward_logits(params, batch)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), f"{arch}: NaN logits"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 2, 24
+    cs = lm_lib.cache_specs(cfg, B, T)
+    caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype or cfg.compute_dtype),
+                          cs, is_leaf=is_spec)
+    serve = jax.jit(make_serve_step(model))
+    logits, new_caches = serve(params, caches, jnp.ones((B, 1), jnp.int32),
+                               jnp.full((B,), 4, jnp.int32))
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), f"{arch}: NaN decode"
+    assert jax.tree.structure(new_caches) == jax.tree.structure(caches)
+
+
+def test_full_configs_match_assignment():
+    """Pin the exact assigned hyperparameters (source-of-truth table)."""
+    want = {
+        "deepseek-v3-671b": dict(n_layers=61, d_model=7168, n_heads=128,
+                                 vocab_size=129280, n_experts=256, moe_top_k=8,
+                                 moe_d_ff=2048),
+        "phi3.5-moe-42b-a6.6b": dict(n_layers=32, d_model=4096, n_heads=32,
+                                     n_kv_heads=8, vocab_size=32064, n_experts=16,
+                                     moe_top_k=2),
+        "tinyllama-1.1b": dict(n_layers=22, d_model=2048, n_heads=32, n_kv_heads=4,
+                               d_ff=5632, vocab_size=32000),
+        "qwen3-4b": dict(n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8,
+                         d_ff=9728, vocab_size=151936, qk_norm=True),
+        "qwen3-14b": dict(n_layers=40, d_model=5120, n_heads=40, n_kv_heads=8,
+                          d_ff=17408, vocab_size=151936, qk_norm=True),
+        "command-r-35b": dict(n_layers=40, d_model=8192, n_heads=64, n_kv_heads=8,
+                              d_ff=22528, vocab_size=256000, use_bias=False),
+        "jamba-1.5-large-398b": dict(n_layers=72, d_model=8192, n_heads=64,
+                                     n_kv_heads=8, vocab_size=65536, n_experts=16,
+                                     moe_top_k=2),
+        "xlstm-125m": dict(n_layers=12, d_model=768, n_heads=4, d_ff=0,
+                           vocab_size=50304),
+        "llama-3.2-vision-11b": dict(n_layers=40, d_model=4096, n_heads=32,
+                                     n_kv_heads=8, d_ff=14336, vocab_size=128256),
+        "whisper-large-v3": dict(n_layers=32, d_model=1280, n_heads=20,
+                                 n_kv_heads=20, d_ff=5120, vocab_size=51866,
+                                 n_encoder_layers=32),
+    }
+    for arch, fields in want.items():
+        cfg = get_config(arch)
+        for k, v in fields.items():
+            got = getattr(cfg, k)
+            assert got == v, f"{arch}.{k}: {got} != {v}"
+
+
+def test_param_counts_plausible():
+    """Total parameter counts must land near the advertised sizes."""
+    from repro.core.flops import total_params
+
+    expect = {"deepseek-v3-671b": (600e9, 740e9), "phi3.5-moe-42b-a6.6b": (38e9, 46e9),
+              "tinyllama-1.1b": (0.9e9, 1.3e9), "qwen3-4b": (3e9, 5e9),
+              "qwen3-14b": (12e9, 17e9), "command-r-35b": (30e9, 40e9),
+              "jamba-1.5-large-398b": (350e9, 440e9), "xlstm-125m": (0.08e9, 0.2e9),
+              "llama-3.2-vision-11b": (8e9, 13e9), "whisper-large-v3": (1.2e9, 2.0e9)}
+    for arch, (lo, hi) in expect.items():
+        model = build_model(get_config(arch))
+        n = total_params(model.specs())
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params outside [{lo/1e9},{hi/1e9}]B"

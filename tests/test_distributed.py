@@ -1,0 +1,105 @@
+"""Sharding rules + a reduced dry-run in a subprocess (8 placeholder devices)
+-- proving the mesh/sharding machinery without pinning 512 devices into the
+test process."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import RULES, logical_spec
+
+
+class FakeMesh:
+    """Duck-typed mesh for pure spec-rule tests (axis_names + shape only)."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_fsdp_tp_placement():
+    # FFN weight: embed -> fsdp axes, mlp -> model
+    assert logical_spec((7168, 2048), ("embed", "mlp"), SINGLE) == P("data", "model")
+    assert logical_spec((7168, 2048), ("embed", "mlp"), MULTI) == P(("pod", "data"), "model")
+    # expert weights: EP on model, embed FSDP'd
+    assert logical_spec((256, 7168, 2048), ("experts", "embed", "moe_mlp"), SINGLE) == \
+        P("model", "data", None)
+
+
+def test_nondivisible_axes_replicate():
+    # 40 heads on 16-way model axis -> replicated (documented in qwen3-14b)
+    assert logical_spec((5120, 40, 128), ("embed", "heads", "head_dim"), SINGLE) == \
+        P("data", None, None)
+    # batch=1 long-context decode cannot shard batch
+    assert logical_spec((1, 1), ("batch", "seq"), SINGLE) == P(None, None)
+
+
+def test_no_mesh_axis_used_twice():
+    spec = logical_spec((64, 64), ("vocab", "heads"), SINGLE)
+    flat = [s for s in spec if s is not None]
+    assert len(flat) == len(set(flat)) == 1  # "model" assigned once only
+
+
+def test_cache_seq_sharding():
+    assert logical_spec((128, 32768, 8, 128),
+                        ("batch", "cache_seq", "cache_kv_heads", "head_dim"), SINGLE) == \
+        P("data", "model", None, None)
+
+
+@pytest.mark.slow
+def test_reduced_dryrun_subprocess(tmp_path):
+    """Lower+compile a smoke config on an 8-device placeholder mesh in a
+    subprocess (mirrors launch/dryrun.py's bootstrap ordering)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, json
+        from repro.configs import get_config
+        from repro.distributed import param_shardings, set_mesh_ctx
+        from repro.launch.analysis import analyze_compiled, memory_summary
+        from repro.models.api import build_model, make_train_step
+        from repro.optim import adamw_init_specs
+        from repro.param import struct_tree
+        from repro.config import TrainConfig
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        set_mesh_ctx(mesh)
+        cfg = get_config("tinyllama-1.1b", smoke=True).replace(
+            d_model=64, vocab_size=512)
+        tc = TrainConfig(steps=10, warmup_steps=1, batch_size=4, seq_len=32)
+        model = build_model(cfg)
+        specs = model.specs()
+        p = struct_tree(specs, dtype=cfg.param_dtype)
+        ps = param_shardings(specs, mesh)
+        o_specs = adamw_init_specs(specs, tc)
+        os_ = struct_tree(o_specs, dtype=tc.opt_dtype)
+        osh = param_shardings(o_specs, mesh)
+        batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+        bsh = {k: NamedSharding(mesh, P("data", None)) for k in batch}
+        step = make_train_step(model, tc)
+        co = jax.jit(step, in_shardings=(ps, osh, bsh)).lower(p, os_, batch).compile()
+        rl, colls = analyze_compiled(co, 8, 1.0)
+        print(json.dumps({"flops": rl.flops_per_device,
+                          "colls": colls["total"]["count"],
+                          "mem": memory_summary(co)["peak_bytes_est"]}))
+    """)
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True,
+                         env=env, cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["flops"] > 0 and rec["colls"] > 0 and rec["mem"] > 0

@@ -1,0 +1,92 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import projections as proj
+from repro.core.vcycle import History, flops_to_reach
+
+even = st.integers(min_value=1, max_value=64).map(lambda k: 2 * k)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=even, variant=st.sampled_from(["stack", "adj"]))
+def test_width_inverse_properties(n, variant):
+    m = proj.width_mats(n, variant)
+    np.testing.assert_allclose(m.T_out @ m.F_out, np.eye(n // 2), atol=1e-10)
+    np.testing.assert_allclose(m.F_in @ m.T_in, np.eye(n // 2), atol=1e-10)
+    # D∘C projection is an idempotent averaging map (symmetric-neuron structure)
+    P = m.F_out @ m.T_out  # [n, n]
+    np.testing.assert_allclose(P @ P, P, atol=1e-10)
+
+
+@settings(max_examples=30, deadline=None)
+@given(L=st.integers(min_value=1, max_value=100), variant=st.sampled_from(["adj", "stack"]))
+def test_depth_inverse_properties(L, variant):
+    d = proj.depth_mats(L, variant)
+    np.testing.assert_allclose(d.G @ d.R, np.eye(d.R.shape[1]), atol=1e-10)
+    np.testing.assert_allclose((d.R @ d.G).sum(0), np.ones(L), atol=1e-10)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=even, c=st.integers(min_value=1, max_value=32),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_general_F_normalization(n, c, seed):
+    """Paper §3.1: F_out may be ANY full-column-rank matrix; the derived
+    T/F_in normalizations must still invert on the small side."""
+    rng = np.random.default_rng(seed)
+    F = rng.normal(size=(n, n // 2))
+    # ensure strictly positive diagonal energy so colsums are non-degenerate
+    F += np.vstack([np.eye(n // 2), np.eye(n // 2)])
+    m = proj.derive_width(F)
+    # value-scale stability: colsum normalization makes T_out F_out row sums finite
+    assert np.all(np.isfinite(m.T_out)) and np.all(np.isfinite(m.T_in))
+
+
+@settings(max_examples=20, deadline=None)
+@given(alpha=st.floats(min_value=0.0, max_value=1.0),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_interpolation_convexity(alpha, seed):
+    from repro.core.operators import interpolate
+
+    rng = np.random.default_rng(seed)
+    a = {"w": jnp.asarray(rng.normal(size=(6, 6)), jnp.float32)}
+    b = {"w": jnp.asarray(rng.normal(size=(6, 6)), jnp.float32)}
+    out = np.asarray(interpolate(a, b, float(alpha))["w"])
+    lo = np.minimum(np.asarray(a["w"]), np.asarray(b["w"]))
+    hi = np.maximum(np.asarray(a["w"]), np.asarray(b["w"]))
+    assert (out >= lo - 1e-5).all() and (out <= hi + 1e-5).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(losses=st.lists(st.floats(min_value=0.1, max_value=10.0), min_size=6, max_size=40))
+def test_flops_to_reach_monotone(losses):
+    h = History()
+    for i, l in enumerate(losses):
+        h.log(float(i + 1), l, i, 0)
+    _, sm = h.smoothed(5)
+    t1 = flops_to_reach(h, float(min(sm)) + 1e-9)
+    t2 = flops_to_reach(h, float(min(sm)) + 1.0)
+    if t1 is not None and t2 is not None:
+        assert t2 <= t1  # easier targets are reached no later
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       n=st.sampled_from([8, 16, 32]))
+def test_cd_identity_random_tensors(seed, n):
+    """C∘D == id on arbitrary tensors for any (axes, roles) combination."""
+    from repro.core.operators import LevelMaps, _project_tree
+    from repro.param import Spec
+
+    rng = np.random.default_rng(seed)
+    maps = LevelMaps(width={"embed": proj.width_mats(n, "stack"),
+                            "mlp": proj.width_mats(2 * n, "adj")},
+                     depth={"stage_0": proj.depth_mats(5, "adj")}).as_jnp()
+    spec = Spec((5, n, 2 * n), ("layers", "embed", "mlp"), ("-", "in", "out"))
+    small = jnp.asarray(rng.normal(size=(3, n // 2, n)), jnp.float32)
+    specs = {"stage_0": {"w": spec}}
+    de = _project_tree({"stage_0": {"w": small}}, specs, maps, "decoalesce", False)
+    rt = _project_tree(de, specs, maps, "coalesce", False)
+    np.testing.assert_allclose(np.asarray(rt["stage_0"]["w"]), np.asarray(small), atol=1e-5)

@@ -1,0 +1,116 @@
+"""End-to-end behaviour tests for the paper's system: the V-cycle actually
+saves compute on a learnable task; the paper's key ablation directions hold
+(Appendix D/F/G at proxy scale); serving works; the launcher resumes."""
+import subprocess
+import sys
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from helpers import fast_tc, tiny_dense
+from repro.config import MultiLevelConfig
+from repro.core.vcycle import run_scratch, run_vcycle, saving_vs_baseline
+from repro.data import MarkovLM, lm_batch
+
+
+@pytest.fixture(scope="module")
+def arena():
+    cfg = tiny_dense(d_model=48, d_ff=96, vocab_size=128,
+                     stages=tiny_dense().stages)
+    tc = fast_tc(steps=60, batch_size=8, seq_len=24, log_every=2, peak_lr=3e-3)
+    chain = MarkovLM(128)
+    bf = lambda step: lm_batch(chain, 0, step, tc.batch_size, tc.seq_len)
+    _, base = run_scratch(cfg, tc, bf, seed=0)
+    return cfg, tc, bf, base
+
+
+@pytest.mark.slow
+def test_vcycle_saves_flops(arena):
+    """The headline claim at proxy scale: the V-cycle reaches the baseline's
+    final quality with fewer training FLOPs."""
+    cfg, tc, bf, base = arena
+    ml = MultiLevelConfig(n_levels=2, alpha=0.25, e_a_frac=0.05, e_small_frac=0.5)
+    target = float(base.smoothed(5)[1][-1])
+    out = run_vcycle(cfg, ml, tc, bf, seed=0, target_loss=target)
+    s = saving_vs_baseline(base, out.history)
+    assert np.isfinite(s["flops_saving"])
+    assert s["flops_saving"] > 0.0, f"no saving: {s}"
+
+
+@pytest.mark.slow
+def test_alpha_one_locks_symmetric_neurons(arena):
+    """The MECHANISM behind paper Table 5(C)/App. G: with alpha=1.0 (pure
+    de-coalescing, no Interpolation) mirrored neuron pairs receive identical
+    gradients forever, so the model trains with only half its effective
+    width; alpha<1 breaks the tie immediately.
+
+    (The end-to-end FLOPs-saving ordering of alpha=1.0 vs 0.25 is
+    scale-dependent and does not reliably reproduce on a 48-dim/60-step
+    proxy -- the capacity ceiling only binds for larger models; the
+    quantitative ablation lives in benchmarks/table5.  The gradient-tie
+    mechanism is exact at any scale and is what we pin here.)"""
+    import jax.numpy as jnp
+
+    from repro.core import operators as ops
+    from repro.models.api import build_model, init_train_state, make_train_step
+
+    cfg, tc, bf, base = arena
+    cfg = cfg.replace(compute_dtype=jnp.float32, qk_norm=False, tie_embeddings=False)
+    ml = MultiLevelConfig(n_levels=2)
+    small_cfg = ops.coalesce_config(cfg, ml, width=True, depth=False)
+    model, small = build_model(cfg), build_model(small_cfg)
+    p_small = small.init(jax.random.PRNGKey(7))
+    de = ops.make_decoalesce_fn(model.specs(), cfg, ml, width=True, depth=False)(p_small)
+
+    def train_n(params, n=4):
+        _, opt = init_train_state(model, tc, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(model, tc))
+        for i in range(n):
+            params, opt, _ = step(params, opt, bf(i))
+        return params
+
+    def pair_gap(params):
+        w = np.asarray(params["stages"]["stage_0"]["b0"]["ffn"]["w_up"], np.float32)
+        F = w.shape[-1]
+        return float(np.abs(w[..., : F // 2] - w[..., F // 2:]).max())
+
+    # alpha = 1.0: the de-coalesced model trains but mirrored pairs stay tied
+    locked = train_n(de)
+    assert pair_gap(locked) < 1e-5, "mirrored neurons must stay identical"
+    # alpha = 0.25: interpolation with an independently-initialized large model
+    p_large = model.init(jax.random.PRNGKey(8))
+    mixed = ops.make_interpolate_fn(0.25)(p_large, de)
+    broken = train_n(mixed)
+    assert pair_gap(broken) > 1e-3, "interpolation must break the symmetry"
+
+
+def test_serve_continuous_batching():
+    from repro.launch.serve import Request, Server
+    from repro.configs import get_config
+
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    srv = Server(cfg, batch=2, max_seq=48)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 100, size=5), max_new=4)
+            for i in range(4)]
+    done = srv.run(reqs)
+    assert len(done) == 4
+    assert all(len(r.out) == 4 for r in done)
+
+
+@pytest.mark.slow
+def test_train_launcher_resumes(tmp_path):
+    env = dict(os.environ, PYTHONPATH="src")
+    root = os.path.join(os.path.dirname(__file__), "..")
+    args = [sys.executable, "-m", "repro.launch.train", "--arch", "tinyllama-1.1b",
+            "--smoke", "--steps", "8", "--batch", "2", "--seq", "16",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "4"]
+    r1 = subprocess.run(args, capture_output=True, text=True, env=env, cwd=root, timeout=300)
+    assert r1.returncode == 0, r1.stderr[-1500:]
+    # second invocation resumes from the final checkpoint
+    r2 = subprocess.run(args + ["--steps", "10"], capture_output=True, text=True,
+                        env=env, cwd=root, timeout=300)
+    assert r2.returncode == 0, r2.stderr[-1500:]
+    assert "resumed from step" in r2.stdout

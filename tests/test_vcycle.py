@@ -1,0 +1,72 @@
+"""Integration: Algorithm 1 end-to-end, baselines, savings metric."""
+import jax
+import numpy as np
+import pytest
+
+from helpers import fast_tc, tiny_dense
+from repro.config import MultiLevelConfig
+from repro.core.vcycle import History, flops_to_reach, run_scratch, run_vcycle, saving_vs_baseline
+from repro.data import MarkovLM, lm_batch
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_dense(d_model=32, d_ff=64, vocab_size=128)
+    tc = fast_tc(steps=30, batch_size=4, seq_len=16, log_every=2, peak_lr=3e-3)
+    chain = MarkovLM(128)
+    bf = lambda step: lm_batch(chain, 0, step, tc.batch_size, tc.seq_len)
+    return cfg, tc, bf
+
+
+def test_vcycle_runs_and_loss_decreases(setup):
+    cfg, tc, bf = setup
+    ml = MultiLevelConfig(n_levels=2, alpha=0.25, e_a_frac=0.1, e_small_frac=0.5)
+    out = run_vcycle(cfg, ml, tc, bf, seed=0)
+    assert len(out.configs) == 2
+    assert out.configs[1].d_model == cfg.d_model // 2
+    assert out.history.loss[-1] < out.history.loss[0]
+    assert out.total_flops > 0
+    # level trace covers both levels
+    assert set(out.history.level) == {0, 1}
+    # small-model steps are cheaper per step (fewer FLOPs per history interval)
+    fl = np.asarray(out.history.flops)
+    lv = np.asarray(out.history.level)
+    d_small = np.diff(fl)[lv[1:] == 1].mean()
+    d_large = np.diff(fl)[lv[1:] == 0].mean()
+    assert d_small < d_large / 4  # ~8x param reduction -> >>4x cheaper
+
+
+def test_three_level_vcycle(setup):
+    cfg, tc, bf = setup
+    ml = MultiLevelConfig(n_levels=3, alpha=0.25, e_a_frac=0.1, e_small_frac=0.3)
+    out = run_vcycle(cfg, ml, tc, bf, seed=0, final_steps=10)
+    assert len(out.configs) == 3
+    assert out.configs[2].d_model == cfg.d_model // 4
+    assert np.isfinite(out.history.loss[-1])
+
+
+def test_savings_metric(setup):
+    cfg, tc, bf = setup
+    _, base = run_scratch(cfg, tc, bf, seed=0)
+    s = saving_vs_baseline(base, base)
+    assert abs(s["flops_saving"]) < 1e-6  # identical run saves nothing
+
+
+@pytest.mark.parametrize("name", ["stackbert", "bert2bert", "network_expansion"])
+def test_growth_baselines_run(setup, name):
+    from repro.core.baselines import BASELINES
+
+    cfg, tc, bf = setup
+    ml = MultiLevelConfig(n_levels=2)
+    hist = BASELINES[name](cfg, ml, tc, bf, small_steps=6, final_steps=6)
+    assert len(hist.loss) > 0 and np.isfinite(hist.loss[-1])
+
+
+def test_ligo_and_ki_run(setup):
+    from repro.core.baselines import run_ki, run_ligo
+
+    cfg, tc, bf = setup
+    ml = MultiLevelConfig(n_levels=2)
+    h1 = run_ligo(cfg, ml, tc, bf, small_steps=4, final_steps=4, fit_steps=3)
+    h2 = run_ki(cfg, ml, tc, bf, small_steps=4, final_steps=4)
+    assert np.isfinite(h1.loss[-1]) and np.isfinite(h2.loss[-1])
