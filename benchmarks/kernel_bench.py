@@ -1,40 +1,97 @@
-"""Kernel micro-benchmarks: correctness (max|err| vs oracle) + wall time of
-the pure-jnp oracle path on this host (the Pallas kernel itself targets TPU;
-interpret-mode timing is not meaningful and is reported only as a check)."""
+"""Kernel micro-benchmarks: every op x backend through the dispatch registry.
+
+For each registered implementation we report wall time and max|err| vs the
+kernels/ref.py oracle, then write one ``BENCH_kernels_<backend>.json`` per
+backend under benchmarks/results/ so the per-backend perf trajectory
+populates over time.  Off-TPU the "pallas" backend resolves to the
+interpreter: its numbers are a correctness check, not a performance claim
+(the flag in the JSON records which executable actually ran).
+"""
 from __future__ import annotations
+
+import functools
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import emit, time_call
-from repro.kernels import ops, ref
+from benchmarks.common import emit, save_json, time_call
+from repro.kernels import dispatch, ref
 
 
-def bench_kernels(quick: bool = False) -> None:
+def _err(got, want) -> float:
+    return float(jnp.max(jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32))))
+
+
+def _sweep_backend(backend: str, quick: bool) -> List[Dict]:
+    rows: List[Dict] = []
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
-    shapes = [(1, 4, 256, 64)] if quick else [(1, 4, 256, 64), (2, 8, 512, 64)]
+    # the sweep only runs backends that resolve to themselves, so "pallas"
+    # here implies real Mosaic; only the interpret backend needs small shapes
+    interpreted = backend == "pallas-interpret"
+    # interpret-mode timing on big shapes is pointlessly slow; shrink the sweep
+    small = quick or interpreted
+
+    # -- flash_attention (fwd + bwd through the custom VJP) ------------------
+    shapes = [(1, 4, 256, 64)] if small else [(1, 4, 256, 64), (2, 8, 512, 64)]
+    impl = dispatch.get_impl("flash_attention", backend)
     for (B, H, S, D) in shapes:
         q = jax.random.normal(ks[0], (B, H, S, D), jnp.bfloat16)
         k = jax.random.normal(ks[1], (B, H, S, D), jnp.bfloat16)
         v = jax.random.normal(ks[2], (B, H, S, D), jnp.bfloat16)
-        fn = jax.jit(lambda q, k, v: ref.naive_attention(q, k, v, causal=True))
-        us = time_call(fn, q, k, v, reps=3)
-        got = ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
-        err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
-                                    - fn(q, k, v).astype(jnp.float32))))
-        emit(f"kernels/flash_attention/B{B}H{H}S{S}D{D}", us, f"max_err={err:.2e}")
+        fwd = jax.jit(functools.partial(impl, causal=True, block_q=128, block_k=128))
+        us = time_call(fwd, q, k, v, reps=1 if interpreted else 3)
+        err = _err(fwd(q, k, v), ref.naive_attention(q, k, v, causal=True))
+        name = f"kernels/flash_attention/{backend}/B{B}H{H}S{S}D{D}"
+        emit(name, us, f"max_err={err:.2e}")
+        rows.append({"op": "flash_attention", "shape": f"B{B}H{H}S{S}D{D}",
+                     "us": us, "max_err": err})
+        grad = jax.jit(jax.grad(lambda q, k, v: jnp.sum(
+            fwd(q, k, v).astype(jnp.float32)), argnums=(0, 1, 2)))
+        us_b = time_call(grad, q, k, v, reps=1 if interpreted else 3)
+        emit(name + "/bwd", us_b, "grad")
+        rows.append({"op": "flash_attention_bwd", "shape": f"B{B}H{H}S{S}D{D}",
+                     "us": us_b, "max_err": None})
 
-    w = jax.random.normal(ks[0], (4096, 2048), jnp.float32)
-    fn = jax.jit(lambda w: ref.coalesce_pair_ref(w, axis=0, w0=0.5))
-    us = time_call(fn, w, reps=5)
-    got = ops.coalesce_pair(w, axis=0, w0=0.5)
-    err = float(jnp.max(jnp.abs(got - fn(w))))
-    emit("kernels/coalesce_pair/4096x2048", us, f"max_err={err:.2e}")
+    # -- coalesce_pair -------------------------------------------------------
+    shape = (1024, 512) if small else (4096, 2048)
+    w = jax.random.normal(ks[0], shape, jnp.float32)
+    impl = dispatch.get_impl("coalesce_pair", backend)
+    fn = jax.jit(functools.partial(impl, axis=0, w0=0.5))
+    us = time_call(fn, w, reps=1 if interpreted else 5)
+    err = _err(fn(w), ref.coalesce_pair_ref(w, axis=0, w0=0.5))
+    name = f"kernels/coalesce_pair/{backend}/{shape[0]}x{shape[1]}"
+    emit(name, us, f"max_err={err:.2e}")
+    rows.append({"op": "coalesce_pair", "shape": f"{shape[0]}x{shape[1]}",
+                 "us": us, "max_err": err})
 
-    a = jax.random.normal(ks[0], (2048, 2048), jnp.float32)
-    b = jax.random.normal(ks[1], (2048, 2048), jnp.float32)
-    fn = jax.jit(lambda a, b: ref.interp_axpy_ref(a, b, 0.25))
-    us = time_call(fn, a, b, reps=5)
-    err = float(jnp.max(jnp.abs(ops.interp_axpy(a, b, 0.25) - fn(a, b))))
-    emit("kernels/interp_axpy/2048x2048", us, f"max_err={err:.2e}")
+    # -- interp_axpy ---------------------------------------------------------
+    shape = (1024, 1024) if small else (2048, 2048)
+    a = jax.random.normal(ks[0], shape, jnp.float32)
+    b = jax.random.normal(ks[1], shape, jnp.float32)
+    impl = dispatch.get_impl("interp_axpy", backend)
+    fn = jax.jit(lambda a, b: impl(a, b, 0.25))
+    us = time_call(fn, a, b, reps=1 if interpreted else 5)
+    err = _err(fn(a, b), ref.interp_axpy_ref(a, b, 0.25))
+    name = f"kernels/interp_axpy/{backend}/{shape[0]}x{shape[1]}"
+    emit(name, us, f"max_err={err:.2e}")
+    rows.append({"op": "interp_axpy", "shape": f"{shape[0]}x{shape[1]}",
+                 "us": us, "max_err": err})
+    return rows
+
+
+def bench_kernels(quick: bool = False) -> None:
+    for backend in dispatch.BACKENDS:
+        resolved = dispatch.resolve_backend("flash_attention", backend)
+        if resolved != backend:
+            # off-TPU "pallas" downgrades to the interpreter; skip the
+            # duplicate sweep and let the pallas-interpret row speak
+            emit(f"kernels/{backend}", 0.0, f"resolved_to={resolved}")
+            continue
+        rows = _sweep_backend(backend, quick)
+        save_json(f"BENCH_kernels_{backend}", {
+            "backend": backend,
+            "platform": jax.default_backend(),
+            "interpreted": backend == "pallas-interpret",
+            "entries": rows,
+        })

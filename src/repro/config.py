@@ -113,6 +113,9 @@ class ModelConfig:
     # parallelism) when the head count does not divide the model axis
     attn_impl: str = "blockwise"  # plain | blockwise | pallas
     attn_block_k: int = 512
+    kernel_backend: str = ""  # "" = auto; else pallas | pallas-interpret | xla
+    # (per-op resolution lives in repro.kernels.dispatch; REPRO_KERNEL_BACKEND
+    # env overrides the auto default, this field overrides both)
     remat: str = "full"  # none | full | dots
     scan_layers: bool = True
     seq_shard_cache: bool = True  # shard decode KV/latent cache seq over "model"

@@ -8,6 +8,14 @@ and norm scales automatically share their F.  The "layers" axis is handled by
 the depth matrices R/G per stage.  Protected axes (head_dim, rope dims,
 d_state, conv taps, vocab, per-head recurrent memories) are never projected;
 see DESIGN.md §4.
+
+Execution: for the paper's main "stack" width variant the F/T contractions are
+pair merges and duplications, so the leaves route through the matrix-free
+fused kernels behind ``repro.kernels.dispatch`` (``coalesce_pair`` /
+``interp_axpy``; one HBM pass, no F matrix, no MXU) -- the "adj" variant,
+``embed_cat2`` block-diagonal matrices and depth R/G keep the dense-matrix
+``tensordot`` path.  All of it stays jit-compatible: backend resolution is
+trace-time, so ``vcycle`` level transitions remain host-round-trip-free.
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ import numpy as np
 
 from repro.config import ModelConfig, MultiLevelConfig, Stage
 from repro.core import projections as proj
+from repro.kernels import dispatch as kdispatch
 from repro.param import Spec, is_spec
 
 # logical axes subject to width coalescing, with the config field giving their size
@@ -98,9 +107,9 @@ class LevelMaps:
     depth: Dict[str, proj.DepthMats]  # per stage name + "encoder"
 
     def as_jnp(self, dtype=jnp.float32) -> "LevelMaps":
-        conv = lambda m: jax.tree.map(lambda a: jnp.asarray(a, dtype), m)
-        width = {k: proj.WidthMats(*[jnp.asarray(getattr(v, f.name), dtype)
-                                     for f in dataclasses.fields(v)])
+        width = {k: dataclasses.replace(
+                     v, **{f: jnp.asarray(getattr(v, f), dtype)
+                           for f in proj.MAT_FIELDS})
                  for k, v in self.width.items()}
         depth = {k: proj.DepthMats(R=jnp.asarray(v.R, dtype), G=jnp.asarray(v.G, dtype))
                  for k, v in self.depth.items()}
@@ -138,15 +147,44 @@ def _contract(w: jax.Array, dim: int, mat: jax.Array, mat_axis: int) -> jax.Arra
     return jnp.moveaxis(out, -1, dim)
 
 
+def _stack_coalesce(w: jax.Array, dim: int, w0: float, backend) -> jax.Array:
+    """Matrix-free "stack"-variant coalescing of ``dim``: fold the leaf to 2D
+    and merge pairs (i, i + n/2) in one fused pass (no F matrix, no matmul)."""
+    n = w.shape[dim]
+    rest = tuple(s for i, s in enumerate(w.shape) if i != dim)
+    w2 = jnp.moveaxis(w, dim, 0).reshape(n, -1)
+    out = kdispatch.dispatch("coalesce_pair", w2, axis=0, w0=w0, backend=backend)
+    return jnp.moveaxis(out.reshape((n // 2,) + rest), 0, dim)
+
+
+def _stack_decoalesce(w: jax.Array, dim: int, w0: float) -> jax.Array:
+    """Matrix-free "stack"-variant de-coalescing: T duplication is a pure
+    gather -- tile the halved axis twice, scaled by the paper's normalization
+    weight (T_out rows are 1.0, T_in rows 0.5)."""
+    dup = jnp.concatenate([w, w], axis=dim)
+    if w0 == 1.0:
+        return dup
+    return (w0 * dup.astype(jnp.float32)).astype(w.dtype)
+
+
 def _width_leaf(w, spec: Spec, width: Dict[str, proj.WidthMats], direction: str,
-                coalesce_experts: bool):
+                coalesce_experts: bool, backend=None, fused: bool = True):
     for d, (ax, role) in enumerate(zip(spec.axes, spec.roles)):
         if ax == "experts" and coalesce_experts and "experts" in width:
             role = "out"  # expert pair-averaging (beyond-paper extension)
         if ax not in width or role not in ("in", "out"):
             continue
         m = width[ax]
-        if direction == "coalesce":
+        if fused and getattr(m, "variant", None) == "stack":
+            # the "stack" averaging matrices ARE pair merges/duplications:
+            # route through the fused kernels instead of materializing F
+            # (F_out weights 0.5, F_in 1.0; T_out 1.0, T_in 0.5 -- the
+            # paper's normalization, pinned by kernels/ref.py oracles)
+            if direction == "coalesce":
+                w = _stack_coalesce(w, d, 0.5 if role == "out" else 1.0, backend)
+            else:
+                w = _stack_decoalesce(w, d, 1.0 if role == "out" else 0.5)
+        elif direction == "coalesce":
             w = _contract(w, d, m.F_out, 0) if role == "out" else _contract(w, d, m.F_in, 1)
         else:
             w = _contract(w, d, m.T_out, 0) if role == "out" else _contract(w, d, m.T_in, 1)
@@ -162,13 +200,15 @@ def _depth_leaf(w, spec: Spec, dm: proj.DepthMats, direction: str):
 
 
 def _project_tree(params, specs, maps: LevelMaps, direction: str,
-                  coalesce_experts: bool, depth_key: Optional[str] = None):
+                  coalesce_experts: bool, depth_key: Optional[str] = None,
+                  backend: Optional[str] = None, fused: bool = True):
     """Recurse through the tree, tracking which stage we are under so the right
     depth matrices apply."""
 
     def rec(p, s, dkey):
         if is_spec(s):
-            w = _width_leaf(p, s, maps.width, direction, coalesce_experts)
+            w = _width_leaf(p, s, maps.width, direction, coalesce_experts,
+                            backend=backend, fused=fused)
             if dkey is not None and dkey in maps.depth:
                 w = _depth_leaf(w, s, maps.depth[dkey], direction)
             return w
@@ -186,40 +226,58 @@ def _project_tree(params, specs, maps: LevelMaps, direction: str,
 
 
 def coalesce(params, specs, cfg: ModelConfig, ml: MultiLevelConfig,
-             maps: Optional[LevelMaps] = None):
+             maps: Optional[LevelMaps] = None, *, fused: bool = True):
     """Paper Algorithm 2: width then depth (they commute on disjoint axes)."""
     maps = (maps or build_level_maps(cfg, ml)).as_jnp()
-    return _project_tree(params, specs, maps, "coalesce", cfg.coalesce_experts)
+    return _project_tree(params, specs, maps, "coalesce", cfg.coalesce_experts,
+                         backend=cfg.kernel_backend or None, fused=fused)
 
 
 def decoalesce(params_small, specs, cfg: ModelConfig, ml: MultiLevelConfig,
-               maps: Optional[LevelMaps] = None):
+               maps: Optional[LevelMaps] = None, *, fused: bool = True):
     """Paper Algorithm 3: depth then width.  ``specs``/``cfg`` are the LARGE
     level's; ``params_small`` the small level's parameters."""
     maps = (maps or build_level_maps(cfg, ml)).as_jnp()
-    return _project_tree(params_small, specs, maps, "decoalesce", cfg.coalesce_experts)
+    return _project_tree(params_small, specs, maps, "decoalesce",
+                         cfg.coalesce_experts,
+                         backend=cfg.kernel_backend or None, fused=fused)
 
 
-def interpolate(params_large, params_decoalesced, alpha: float):
-    """Paper Algorithm 4 / Eq. 13: M <- (1-a) M + a D(M_small)."""
+def interpolate(params_large, params_decoalesced, alpha: float,
+                backend: Optional[str] = None):
+    """Paper Algorithm 4 / Eq. 13: M <- (1-a) M + a D(M_small).
+
+    Each leaf runs through the fused ``interp_axpy`` kernel (one read of a and
+    b, one write -- the memory-bound pass the Pallas kernel targets at scale)."""
     return jax.tree.map(
-        lambda a, b: ((1.0 - alpha) * a.astype(jnp.float32)
-                      + alpha * b.astype(jnp.float32)).astype(a.dtype),
+        lambda a, b: kdispatch.dispatch("interp_axpy", a, b, alpha,
+                                        backend=backend),
         params_large, params_decoalesced)
 
 
 def make_coalesce_fn(specs, cfg: ModelConfig, ml: MultiLevelConfig,
-                     *, width: bool = True, depth: bool = True):
-    """jit'd level-transition: at 100B+ scale these run as sharded einsums."""
+                     *, width: bool = True, depth: bool = True,
+                     fused: bool = True):
+    """jit'd level-transition.  "stack"-variant width axes route through the
+    matrix-free fused kernels (repro.kernels.dispatch); everything else runs
+    as sharded einsums.  ``fused=False`` forces the dense-matrix path (the
+    equivalence oracle for tests/benchmarks)."""
     maps = build_level_maps(cfg, ml, width=width, depth=depth).as_jnp()
-    return jax.jit(lambda p: _project_tree(p, specs, maps, "coalesce", cfg.coalesce_experts))
+    backend = cfg.kernel_backend or None
+    return jax.jit(lambda p: _project_tree(p, specs, maps, "coalesce",
+                                           cfg.coalesce_experts,
+                                           backend=backend, fused=fused))
 
 
 def make_decoalesce_fn(specs, cfg: ModelConfig, ml: MultiLevelConfig,
-                       *, width: bool = True, depth: bool = True):
+                       *, width: bool = True, depth: bool = True,
+                       fused: bool = True):
     maps = build_level_maps(cfg, ml, width=width, depth=depth).as_jnp()
-    return jax.jit(lambda p: _project_tree(p, specs, maps, "decoalesce", cfg.coalesce_experts))
+    backend = cfg.kernel_backend or None
+    return jax.jit(lambda p: _project_tree(p, specs, maps, "decoalesce",
+                                           cfg.coalesce_experts,
+                                           backend=backend, fused=fused))
 
 
-def make_interpolate_fn(alpha: float):
-    return jax.jit(lambda a, b: interpolate(a, b, alpha))
+def make_interpolate_fn(alpha: float, backend: Optional[str] = None):
+    return jax.jit(lambda a, b: interpolate(a, b, alpha, backend=backend))

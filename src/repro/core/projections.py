@@ -20,9 +20,11 @@ the averaging matrices C(D(w)) == w exactly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
+
+MAT_FIELDS = ("F_out", "F_in", "T_out", "T_in")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,6 +33,11 @@ class WidthMats:
     F_in: np.ndarray  # [m, n]
     T_out: np.ndarray  # [m, n]
     T_in: np.ndarray  # [n, m]
+    # which pair structure generated F_out ("stack" | "adj" | None).  "stack"
+    # marks the matrices whose contraction is exactly the matrix-free
+    # coalesce_pair / duplication kernels (core/operators.py fused path);
+    # None (e.g. block_diag_width, hand-built F) keeps the dense-matrix path.
+    variant: Optional[str] = None
 
 
 def pair_merge_matrix(n: int, m: int, variant: str) -> np.ndarray:
@@ -50,7 +57,7 @@ def pair_merge_matrix(n: int, m: int, variant: str) -> np.ndarray:
     return F
 
 
-def derive_width(F_out: np.ndarray) -> WidthMats:
+def derive_width(F_out: np.ndarray, variant: Optional[str] = None) -> WidthMats:
     """Apply the paper's normalization formulas to an arbitrary full-column-rank
     F_out (works for non-averaging choices too)."""
     FFt = F_out @ F_out.T  # [n,n]
@@ -60,11 +67,12 @@ def derive_width(F_out: np.ndarray) -> WidthMats:
     M = F_in.T @ F_in  # [n,n]
     row = M.sum(axis=1)
     T_in = (1.0 / np.where(row == 0, 1.0, row))[:, None] * F_in.T  # [n,m]
-    return WidthMats(F_out=F_out, F_in=F_in, T_out=T_out, T_in=T_in)
+    return WidthMats(F_out=F_out, F_in=F_in, T_out=T_out, T_in=T_in,
+                     variant=variant)
 
 
 def width_mats(n: int, variant: str = "stack") -> WidthMats:
-    return derive_width(pair_merge_matrix(n, n // 2, variant))
+    return derive_width(pair_merge_matrix(n, n // 2, variant), variant)
 
 
 def block_diag_width(mats: WidthMats, blocks: int) -> WidthMats:

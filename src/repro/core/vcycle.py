@@ -2,8 +2,11 @@
 FLOPs-indexed loss history (the paper's evaluation axis).
 
 The runner is production-shaped: per-level compiled steps are built once and
-cached; level transitions are jitted sharded einsums (no host round-trip); the
-optimizer is re-initialized at transitions (paper §Discussion / App. C); and
+cached; level transitions are jitted and host-round-trip-free, with the
+"stack"-variant width projections and the interpolation running matrix-free
+through the kernel registry (repro.kernels.dispatch: Pallas on TPU, fused XLA
+elsewhere); the optimizer is re-initialized at transitions (paper §Discussion
+/ App. C); and
 the whole V-cycle state (level, phase, step) is checkpointable via
 ``repro.checkpoint`` (see launch/train.py).
 """
@@ -181,7 +184,9 @@ def run_vcycle(
         if verbose:
             print(f"[vcycle] level {l} trained {E_small} steps, de-coalescing")
         de = ops.make_decoalesce_fn(specs[l - 1], cfgs[l - 1], ml)(params)
-        params = ops.make_interpolate_fn(ml.alpha)(params_before[l - 1], de)
+        params = ops.make_interpolate_fn(
+            ml.alpha, backend=cfgs[l - 1].kernel_backend or None)(
+            params_before[l - 1], de)
 
     # ---- final: train M_1 until convergence (line 10)
     fs = final_steps if final_steps is not None else tc.steps

@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Compute hot-spot kernels (Pallas TPU) + the backend registry.
+#
+# Import ``repro.kernels.dispatch`` to resolve an op ("flash_attention",
+# "coalesce_pair", "interp_axpy") to a backend ("pallas", "pallas-interpret",
+# "xla"); see kernels/README.md for selection rules and the
+# REPRO_KERNEL_BACKEND override.  ``ops.py`` keeps jit'd direct wrappers,
+# ``ref.py`` the pure-jnp oracles used as test/bench ground truth.

@@ -26,9 +26,11 @@ def _pair_kernel(a_ref, b_ref, o_ref, *, w0: float):
                         + b_ref[...].astype(jnp.float32))).astype(o_ref.dtype)
 
 
-def _divisor_block(n: int, pref: int) -> int:
+def divisor_block(n: int, pref: int) -> int:
     """Largest divisor of n that is <= pref (keeps tiles HW-aligned when the
-    dim allows, and always valid)."""
+    dim allows, and always valid).  On odd/prime dims this collapses to 1 --
+    per-element grid programs; the dispatch layer detects that degenerate case
+    and falls back to the XLA backend instead of calling this kernel."""
     b = min(pref, n)
     while n % b:
         b -= 1
@@ -52,15 +54,15 @@ def coalesce_pair(
     half = n // 2
     r, c = w.shape
     if axis == 0:
-        br = _divisor_block(half, block)
-        bc = _divisor_block(c, block)
+        br = divisor_block(half, block)
+        bc = divisor_block(c, block)
         grid = (half // br, c // bc)
         a_spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
         b_spec = pl.BlockSpec((br, bc), lambda i, j: (i + half // br, j))
         out_shape = jax.ShapeDtypeStruct((half, c), w.dtype)
     else:
-        br = _divisor_block(r, block)
-        bc = _divisor_block(half, block)
+        br = divisor_block(r, block)
+        bc = divisor_block(half, block)
         grid = (r // br, half // bc)
         a_spec = pl.BlockSpec((br, bc), lambda i, j: (i, j))
         b_spec = pl.BlockSpec((br, bc), lambda i, j: (i, j + half // bc))

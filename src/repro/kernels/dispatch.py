@@ -1,0 +1,186 @@
+"""Kernel backend registry + dispatch layer.
+
+Every compute hot-spot the paper optimizes (``flash_attention``,
+``coalesce_pair``, ``interp_axpy``) is registered under three backends:
+
+  * ``pallas``           -- the real Mosaic TPU kernel (TPU hardware only)
+  * ``pallas-interpret`` -- the same kernel body executed by the Pallas
+                            interpreter (CPU validation; bit-exact semantics,
+                            not a performance path)
+  * ``xla``              -- a matrix-free pure-jnp reference that lowers for
+                            any backend
+
+Selection order (first hit wins):
+
+  1. an explicit ``backend=`` argument (``ModelConfig.kernel_backend`` is
+     threaded here by the layers and operators),
+  2. the ``REPRO_KERNEL_BACKEND`` environment variable,
+  3. the platform default: ``pallas`` on TPU, ``xla`` elsewhere.
+
+Requesting ``pallas`` off-TPU auto-downgrades to ``pallas-interpret`` (Mosaic
+cannot compile on CPU); everything else resolves exactly as asked.  Resolution
+happens at trace time, so a jitted caller bakes the chosen backend into its
+executable -- no host round-trips inside ``vcycle`` level transitions.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.coalesce_pair import coalesce_pair, divisor_block
+from repro.kernels.flash_attention import flash_attention_with_vjp
+from repro.kernels.interp_axpy import interp_axpy
+
+BACKENDS = ("pallas", "pallas-interpret", "xla")
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+
+
+def register(op: str, backend: str, fn: Callable, *, override: bool = False) -> None:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    impls = _REGISTRY.setdefault(op, {})
+    if backend in impls and not override:
+        raise ValueError(f"{op}/{backend} already registered")
+    impls[backend] = fn
+
+
+def ops() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def backends(op: str) -> Tuple[str, ...]:
+    if op not in _REGISTRY:
+        raise KeyError(f"unknown op {op!r}; registered: {ops()}")
+    return tuple(b for b in BACKENDS if b in _REGISTRY[op])
+
+
+def validate_backend(backend: str) -> str:
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {backend!r}; expected one of {BACKENDS}")
+    return backend
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_backend() -> str:
+    return "pallas" if on_tpu() else "xla"
+
+
+def resolve_backend(op: str, backend: Optional[str] = None,
+                    default: Optional[str] = None) -> str:
+    """Resolve the backend name for ``op`` (argument > env > default >
+    platform).  ``default`` lets a caller state its own preference (e.g.
+    ``attn_impl="pallas"`` prefers pallas) without shadowing the user's
+    explicit config/env choice."""
+    b = backend or os.environ.get(ENV_VAR) or default or default_backend()
+    validate_backend(b)
+    if b == "pallas" and not on_tpu():
+        b = "pallas-interpret"
+    if b not in _REGISTRY.get(op, {}):
+        raise KeyError(f"op {op!r} has no {b!r} implementation "
+                       f"(available: {backends(op)})")
+    return b
+
+
+def get_impl(op: str, backend: str) -> Callable:
+    if op not in _REGISTRY or backend not in _REGISTRY[op]:
+        raise KeyError(f"no implementation for {op!r}/{backend!r}")
+    return _REGISTRY[op][backend]
+
+
+def dispatch(op: str, *args, backend: Optional[str] = None, **kw):
+    """Resolve and call ``op``.  Safe inside jit: resolution is trace-time."""
+    return get_impl(op, resolve_backend(op, backend))(*args, **kw)
+
+
+# ---------------------------------------------------------------------------
+# registered implementations
+#
+# All backends of one op share a single keyword signature so callers (layers,
+# operators, benchmarks, tests) can swap backends without code changes.
+
+
+def _flash_attention_pallas(q, k, v, *, causal=True, scale=None,
+                            block_q=128, block_k=128, interpret=False):
+    return flash_attention_with_vjp(q, k, v, causal=causal, scale=scale,
+                                    block_q=block_q, block_k=block_k,
+                                    interpret=interpret)
+
+
+def _flash_attention_interpret(q, k, v, *, causal=True, scale=None,
+                               block_q=128, block_k=128):
+    return _flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                   block_q=block_q, block_k=block_k,
+                                   interpret=True)
+
+
+def _flash_attention_xla(q, k, v, *, causal=True, scale=None,
+                         block_q=0, block_k=0):
+    return ref.naive_attention(q, k, v, causal=causal, scale=scale)
+
+
+def coalesce_pair_xla(w, *, axis: int, w0: float = 0.5, block: int = 0):
+    """Matrix-free XLA reference: one fused slice+add pass, any ndim."""
+    n = w.shape[axis]
+    if n % 2:
+        raise ValueError(f"axis {axis} size {n} must be even")
+    half = n // 2
+    a = jax.lax.slice_in_dim(w, 0, half, axis=axis)
+    b = jax.lax.slice_in_dim(w, half, n, axis=axis)
+    return (w0 * (a.astype(jnp.float32) + b.astype(jnp.float32))).astype(w.dtype)
+
+
+def _coalesce_pair_degenerate(w, axis: int, block: int) -> bool:
+    """True when ``divisor_block`` would collapse a tile dimension to 1
+    (odd/prime or size-1 dims): the Pallas tiles then waste almost the whole
+    lane/sublane register or degenerate to per-element grid programs, so the
+    XLA backend is the right tool."""
+    if w.ndim != 2:
+        return True
+    half = w.shape[axis] // 2
+    other = w.shape[1 - axis]
+    return divisor_block(half, block) == 1 or divisor_block(other, block) == 1
+
+
+def _coalesce_pair_pallas(w, *, axis, w0=0.5, block=256, interpret=False):
+    if _coalesce_pair_degenerate(w, axis, block):
+        return coalesce_pair_xla(w, axis=axis, w0=w0)
+    return coalesce_pair(w, axis=axis, w0=w0, block=block, interpret=interpret)
+
+
+def _coalesce_pair_interpret(w, *, axis, w0=0.5, block=256):
+    return _coalesce_pair_pallas(w, axis=axis, w0=w0, block=block, interpret=True)
+
+
+def _interp_axpy_pallas(a, b, alpha, *, block=1024, interpret=False):
+    return interp_axpy(a, b, alpha, block=block, interpret=interpret)
+
+
+def _interp_axpy_interpret(a, b, alpha, *, block=1024):
+    return _interp_axpy_pallas(a, b, alpha, block=block, interpret=True)
+
+
+def _interp_axpy_xla(a, b, alpha, *, block=0):
+    return ref.interp_axpy_ref(a, b, alpha)
+
+
+register("flash_attention", "pallas", _flash_attention_pallas)
+register("flash_attention", "pallas-interpret", _flash_attention_interpret)
+register("flash_attention", "xla", _flash_attention_xla)
+
+register("coalesce_pair", "pallas", _coalesce_pair_pallas)
+register("coalesce_pair", "pallas-interpret", _coalesce_pair_interpret)
+register("coalesce_pair", "xla", coalesce_pair_xla)
+
+register("interp_axpy", "pallas", _interp_axpy_pallas)
+register("interp_axpy", "pallas-interpret", _interp_axpy_interpret)
+register("interp_axpy", "xla", _interp_axpy_xla)

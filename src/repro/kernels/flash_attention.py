@@ -1,4 +1,4 @@
-"""Flash attention forward kernel (Pallas TPU).
+"""Flash attention kernels (Pallas TPU): forward + recompute-based backward.
 
 TPU-native adaptation: MXU-aligned [block_q x block_k] tiles streamed through
 VMEM, online softmax with fp32 (m, l, acc) VMEM scratch carried across the
@@ -8,12 +8,21 @@ path only gets from the pairs-scan).
 
 Grid: (batch*heads, n_q_blocks, n_k_blocks); the k-block axis is innermost so
 scratch accumulators persist per (bh, qi) like the reference TPU kernel.
-Validated in interpret mode against ref.naive_attention (tests/test_kernels.py).
+
+The backward follows the flash-attention recipe (same as the XLA-level
+``_flash_xla_bwd`` in layers/attention.py): save only (q, k, v, out, lse),
+recompute the probabilities per tile from the saved log-sum-exp, and run two
+kernels -- one accumulating dq over k-blocks, one accumulating (dk, dv) over
+q-blocks -- so no O(S^2) intermediate ever touches HBM.
+``flash_attention_with_vjp`` packages fwd+bwd behind ``jax.custom_vjp``.
+
+Validated in interpret mode against ref.naive_attention, values and grads
+(tests/test_kernels.py, tests/test_dispatch.py).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +32,7 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
                   scale: float, causal: bool, bq: int, bk: int, nk: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
@@ -62,7 +71,52 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(ki == nk - 1)
     def _out():
-        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0] = m_scr[...] + jnp.log(l)
+
+
+def _fwd_call(q, k, v, *, causal: bool, scale: float, bq: int, bk: int,
+              interpret: bool) -> Tuple[jax.Array, jax.Array]:
+    """Flattened [B*H, S, D] forward; returns (out, lse)."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    Dv = v.shape[2]
+    nq, nk = S // bq, T // bk
+    kern = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                             bq=bq, bk=bk, nk=nk)
+    out, lse = pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, Dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, Dv), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, Dv), q.dtype),
+            jax.ShapeDtypeStruct((BH, S), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse
+
+
+def _resolve_blocks(S: int, T: int, block_q: int, block_k: int) -> Tuple[int, int]:
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    if S % bq or T % bk:
+        raise ValueError(f"S={S} T={T} must divide block sizes ({bq},{bk})")
+    return bq, bk
 
 
 def flash_attention(
@@ -76,36 +130,218 @@ def flash_attention(
     block_k: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
+    """Forward-only flash attention (no custom gradient)."""
     B, H, S, D = q.shape
     T = k.shape[2]
     Dv = v.shape[3]
     scale = D ** -0.5 if scale is None else scale
-    bq = min(block_q, S)
-    bk = min(block_k, T)
-    if S % bq or T % bk:
-        raise ValueError(f"S={S} T={T} must divide block sizes ({bq},{bk})")
-    nq, nk = S // bq, T // bk
-    qf = q.reshape(B * H, S, D)
-    kf = k.reshape(B * H, T, D)
-    vf = v.reshape(B * H, T, Dv)
-
-    kern = functools.partial(_flash_kernel, scale=scale, causal=causal,
-                             bq=bq, bk=bk, nk=nk)
-    out = pl.pallas_call(
-        kern,
-        grid=(B * H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, Dv), lambda b, i, j: (b, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, bq, Dv), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, S, Dv), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq,), jnp.float32),
-            pltpu.VMEM((bq,), jnp.float32),
-            pltpu.VMEM((bq, Dv), jnp.float32),
-        ],
-        interpret=interpret,
-    )(qf, kf, vf)
+    bq, bk = _resolve_blocks(S, T, block_q, block_k)
+    out, _ = _fwd_call(q.reshape(B * H, S, D), k.reshape(B * H, T, D),
+                       v.reshape(B * H, T, Dv), causal=causal, scale=scale,
+                       bq=bq, bk=bk, interpret=interpret)
     return out.reshape(B, H, S, Dv)
+
+
+# ---------------------------------------------------------------------------
+# backward kernels (recompute p from saved lse; flash-attention recipe)
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   dq_scr, *, scale: float, causal: bool, bq: int, bk: int, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # [bq, D]
+        k = k_ref[0].astype(jnp.float32)  # [bk, D]
+        v = v_ref[0].astype(jnp.float32)  # [bk, Dv]
+        do = do_ref[0].astype(jnp.float32)  # [bq, Dv]
+        lse = lse_ref[0]  # [bq]
+        delta = delta_ref[0]  # [bq]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, -jnp.inf)
+        p = jnp.exp(s - lse[:, None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [bq, bk]
+        ds = p * (dp - delta[:, None]) * scale
+        dq_scr[...] += jax.lax.dot(ds, k, preferred_element_type=jnp.float32)
+
+    if causal:
+        pl.when(ki * bk <= (qi + 1) * bq - 1)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == nk - 1)
+    def _out():
+        dq_ref[0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref,
+                    dv_ref, dk_scr, dv_scr, *, scale: float, causal: bool,
+                    bq: int, bk: int, nq: int):
+    ki = pl.program_id(1)
+    qi = pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # [bq, D]
+        k = k_ref[0].astype(jnp.float32)  # [bk, D]
+        v = v_ref[0].astype(jnp.float32)  # [bk, Dv]
+        do = do_ref[0].astype(jnp.float32)  # [bq, Dv]
+        lse = lse_ref[0]  # [bq]
+        delta = delta_ref[0]  # [bq]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, -jnp.inf)
+        p = jnp.exp(s - lse[:, None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)  # [bq, bk]
+        dv_scr[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                           preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [bq, bk]
+        ds = p * (dp - delta[:, None]) * scale
+        dk_scr[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                           preferred_element_type=jnp.float32)
+
+    if causal:
+        pl.when((qi + 1) * bq - 1 >= ki * bk)(_compute)
+    else:
+        _compute()
+
+    @pl.when(qi == nq - 1)
+    def _out():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _bwd_call(q, k, v, out, lse, do, *, causal: bool, scale: float, bq: int,
+              bk: int, interpret: bool):
+    """Flattened [B*H, S, D] backward; returns (dq, dk, dv)."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    Dv = v.shape[2]
+    nq, nk = S // bq, T // bk
+    # rowwise correction term D_i = sum_v do*out (cheap elementwise pass)
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+
+    q_spec_i = pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0))
+    k_spec_j = pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0))
+    v_spec_j = pl.BlockSpec((1, bk, Dv), lambda b, i, j: (b, j, 0))
+    do_spec_i = pl.BlockSpec((1, bq, Dv), lambda b, i, j: (b, i, 0))
+    row_spec_i = pl.BlockSpec((1, bq), lambda b, i, j: (b, i))
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, nk=nk),
+        grid=(BH, nq, nk),
+        in_specs=[q_spec_i, k_spec_j, v_spec_j, do_spec_i, row_spec_i, row_spec_i],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # (dk, dv) grid transposes the block roles: k-block outer, q-block inner
+    q_spec_j = pl.BlockSpec((1, bq, D), lambda b, i, j: (b, j, 0))
+    k_spec_i = pl.BlockSpec((1, bk, D), lambda b, i, j: (b, i, 0))
+    v_spec_i = pl.BlockSpec((1, bk, Dv), lambda b, i, j: (b, i, 0))
+    do_spec_j = pl.BlockSpec((1, bq, Dv), lambda b, i, j: (b, j, 0))
+    row_spec_j = pl.BlockSpec((1, bq), lambda b, i, j: (b, j))
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, scale=scale, causal=causal,
+                          bq=bq, bk=bk, nq=nq),
+        grid=(BH, nk, nq),
+        in_specs=[q_spec_j, k_spec_i, v_spec_i, do_spec_j, row_spec_j, row_spec_j],
+        out_specs=[
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, Dv), lambda b, i, j: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, D), k.dtype),
+            jax.ShapeDtypeStruct((BH, T, Dv), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bk, D), jnp.float32),
+                        pltpu.VMEM((bk, Dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP packaging
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_vjp(q, k, v, causal: bool, scale: float, bq: int, bk: int,
+               interpret: bool):
+    B, H, S, D = q.shape
+    T, Dv = k.shape[2], v.shape[3]
+    out, _ = _fwd_call(q.reshape(B * H, S, D), k.reshape(B * H, T, D),
+                       v.reshape(B * H, T, Dv), causal=causal, scale=scale,
+                       bq=bq, bk=bk, interpret=interpret)
+    return out.reshape(B, H, S, Dv)
+
+
+def _flash_vjp_fwd(q, k, v, causal, scale, bq, bk, interpret):
+    B, H, S, D = q.shape
+    T, Dv = k.shape[2], v.shape[3]
+    out, lse = _fwd_call(q.reshape(B * H, S, D), k.reshape(B * H, T, D),
+                         v.reshape(B * H, T, Dv), causal=causal, scale=scale,
+                         bq=bq, bk=bk, interpret=interpret)
+    return out.reshape(B, H, S, Dv), (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, scale, bq, bk, interpret, res, do):
+    q, k, v, out, lse = res
+    B, H, S, D = q.shape
+    T, Dv = k.shape[2], v.shape[3]
+    dq, dk, dv = _bwd_call(
+        q.reshape(B * H, S, D), k.reshape(B * H, T, D), v.reshape(B * H, T, Dv),
+        out, lse, do.reshape(B * H, S, Dv), causal=causal, scale=scale,
+        bq=bq, bk=bk, interpret=interpret)
+    return (dq.reshape(B, H, S, D), dk.reshape(B, H, T, D),
+            dv.reshape(B, H, T, Dv))
+
+
+_flash_vjp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def flash_attention_with_vjp(
+    q: jax.Array,  # [B, H, S, D]
+    k: jax.Array,  # [B, H, T, D]
+    v: jax.Array,  # [B, H, T, Dv]
+    *,
+    causal: bool = True,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Differentiable flash attention: Pallas forward AND backward kernels.
+
+    Heads must match between q and k/v -- GQA callers broadcast KV over the
+    query groups first so the group-sum of dk/dv falls out of the broadcast's
+    own VJP (see layers/attention.py).
+    """
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    scale = D ** -0.5 if scale is None else scale
+    bq, bk = _resolve_blocks(S, T, block_q, block_k)
+    return _flash_vjp(q, k, v, bool(causal), float(scale), bq, bk,
+                      bool(interpret))

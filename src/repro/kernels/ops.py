@@ -12,6 +12,7 @@ import jax
 
 from repro.kernels.coalesce_pair import coalesce_pair as _coalesce_pair
 from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.flash_attention import flash_attention_with_vjp as _flash_attention_vjp
 from repro.kernels.interp_axpy import interp_axpy as _interp_axpy
 
 
@@ -25,6 +26,15 @@ def flash_attention(q, k, v, *, causal=True, scale=None, block_q=128, block_k=12
     interp = (not _on_tpu()) if interpret is None else interpret
     return _flash_attention(q, k, v, causal=causal, scale=scale,
                             block_q=block_q, block_k=block_k, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q", "block_k", "interpret"))
+def flash_attention_vjp(q, k, v, *, causal=True, scale=None, block_q=128,
+                        block_k=128, interpret=None):
+    """Differentiable variant: Pallas forward and backward kernels."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _flash_attention_vjp(q, k, v, causal=causal, scale=scale,
+                                block_q=block_q, block_k=block_k, interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("axis", "w0", "block", "interpret"))

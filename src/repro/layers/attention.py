@@ -8,6 +8,12 @@ Three core computations:
                              (q-block, k-block) pairs.  Used for long prefill and
                              available for training (perf lever, see EXPERIMENTS).
 
+``attn_impl="pallas"`` additionally dispatches train/prefill attention through
+the kernel registry (repro.kernels.dispatch) to the Pallas flash kernels --
+forward AND backward (custom VJP) -- with the XLA flash recipe below as the
+fallback for shapes the tiling cannot cover.  Both flash paths assume query
+positions 0..S-1 (train/prefill); decode uses plain attention.
+
 All attention math runs in fp32 softmax with bf16 matmul inputs (TPU MXU style).
 """
 from __future__ import annotations
@@ -20,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.distributed import shard_l
+from repro.kernels import dispatch as kdispatch
 from repro.layers.basic import apply_rope, rms_norm
 from repro.param import Spec
 
@@ -283,6 +290,34 @@ def _flash_xla_bwd(causal, scale, block_k, res, do):
 flash_xla.defvjp(_flash_xla_fwd, _flash_xla_bwd)
 
 
+def _largest_divisor(n: int, pref: int) -> int:
+    b = min(pref, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+def _flash_pallas(q, k, v, *, causal: bool, scale: float, bq: int, bk: int,
+                  backend: str) -> jax.Array:
+    """Adapter from the layer layout [B,S,KH,G,D] to the kernel's [B,H,S,D].
+
+    GQA KV is broadcast over the query groups BEFORE the custom-VJP boundary:
+    the kernel then sees matched head counts, and the group-sum of dk/dv falls
+    out of the broadcast's own VJP (no GQA logic inside the kernel).
+    """
+    B, S, KH, G, Dq = q.shape
+    T = k.shape[1]
+    Dv = v.shape[-1]
+    qh = q.transpose(0, 2, 3, 1, 4).reshape(B, KH * G, S, Dq)
+    kh = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, KH, G, T, Dq)).reshape(B, KH * G, T, Dq)
+    vh = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None],
+                          (B, KH, G, T, Dv)).reshape(B, KH * G, T, Dv)
+    out = kdispatch.get_impl("flash_attention", backend)(
+        qh, kh, vh, causal=causal, scale=scale, block_q=bq, block_k=bk)
+    return out.reshape(B, KH, G, S, Dv).transpose(0, 3, 1, 2, 4)
+
+
 def run_attention(q, k, v, cfg: ModelConfig, *, causal: bool, scale: float,
                   q_positions=None, decode: bool = False) -> jax.Array:
     S, T = q.shape[1], k.shape[1]
@@ -293,9 +328,20 @@ def run_attention(q, k, v, cfg: ModelConfig, *, causal: bool, scale: float,
         # FLOP-exact causal (lower-triangular block pairs); best for no-grad
         # prefill where the rectangular fwd would waste ~2x attention FLOPs.
         return pairs_attention(q, k, v, scale=scale, block=cfg.attn_block_k)
+    if impl == "pallas":
+        # genuine Pallas dispatch (fwd + custom-VJP bwd kernels): Mosaic on
+        # TPU, the interpreter off-TPU unless the config/env pins "xla".
+        backend = kdispatch.resolve_backend(
+            "flash_attention", cfg.kernel_backend or None, default="pallas")
+        bq = _largest_divisor(S, 128)
+        bk = _largest_divisor(T, min(cfg.attn_block_k, 128))
+        tileable = bq >= 8 and bk >= 8 and (not causal or S == T)
+        if backend != "xla" and tileable:
+            return _flash_pallas(q, k, v, causal=causal, scale=scale,
+                                 bq=bq, bk=bk, backend=backend)
+        # fall through: the XLA flash recipe below is the same algorithm
     if impl in ("blockwise", "pallas", "pairs"):
-        # memory-optimal custom-VJP path (flash recipe at the XLA level);
-        # on TPU hardware `pallas` swaps in the Mosaic kernel for the forward.
+        # memory-optimal custom-VJP path (flash recipe at the XLA level)
         return flash_xla(q, k, v, causal, scale, cfg.attn_block_k)
     return plain_attention(q, k, v, causal=causal, scale=scale, q_positions=q_positions)
 

@@ -61,6 +61,11 @@ class Model:
 
 
 def build_model(cfg: ModelConfig) -> Model:
+    if cfg.kernel_backend:
+        # fail fast on a typo'd backend instead of mid-training at trace time
+        from repro.kernels import dispatch as kdispatch
+
+        kdispatch.validate_backend(cfg.kernel_backend)
     return Model(cfg)
 
 

@@ -34,9 +34,12 @@ def test_shardmap_psum_single_device():
     grads = {"w": jnp.ones((8, 8)) * 0.5}
     ef = init_ef_state(grads)
 
+    # jax.shard_map landed after 0.4.37; use the experimental home it has there
+    from jax.experimental.shard_map import shard_map
+
     @jax.jit
     def run(g, e):
-        return jax.shard_map(
+        return shard_map(
             lambda g, e: ef_int8_psum(g, e, "data"), mesh=mesh,
             in_specs=(jax.sharding.PartitionSpec(), jax.sharding.PartitionSpec()),
             out_specs=(jax.sharding.PartitionSpec(), jax.sharding.PartitionSpec()),

@@ -1,11 +1,17 @@
-"""Per-kernel sweeps: shapes x dtypes, assert_allclose vs the ref.py oracles
-(interpret mode executes the kernel body on CPU; TPU is the target)."""
+"""Per-kernel sweeps: shapes x dtypes x registry backends, assert_allclose vs
+the ref.py oracles through the one dispatch entry point (interpret mode
+executes the kernel body on CPU; TPU is the target)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref
+
+# every backend that resolves to itself on this host ("pallas" downgrades to
+# the interpreter off-TPU -- skip the duplicate sweep)
+RESOLVABLE = tuple(b for b in dispatch.BACKENDS
+                   if dispatch.resolve_backend("coalesce_pair", b) == b)
 
 
 @pytest.mark.parametrize("shape", [
@@ -40,13 +46,15 @@ def test_flash_attention_block_invariance(block):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-5)
 
 
+@pytest.mark.parametrize("backend", RESOLVABLE)
 @pytest.mark.parametrize("shape", [(8, 8), (512, 384), (64, 640), (768, 64)])
 @pytest.mark.parametrize("axis", [0, 1])
 @pytest.mark.parametrize("w0", [0.5, 1.0])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_coalesce_pair_sweep(shape, axis, w0, dtype):
+def test_coalesce_pair_sweep(backend, shape, axis, w0, dtype):
     w = jax.random.normal(jax.random.PRNGKey(2), shape, dtype)
-    got = ops.coalesce_pair(w, axis=axis, w0=w0, block=128)
+    got = dispatch.dispatch("coalesce_pair", w, axis=axis, w0=w0, block=128,
+                            backend=backend)
     want = ref.coalesce_pair_ref(w, axis=axis, w0=w0)
     tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
     np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
@@ -68,15 +76,46 @@ def test_coalesce_pair_matches_paper_operator():
     np.testing.assert_allclose(np.asarray(got2), np.asarray(want2), atol=1e-5)
 
 
+@pytest.mark.parametrize("backend", RESOLVABLE)
 @pytest.mark.parametrize("shape", [(33,), (1000, 37), (16, 16, 16)])
 @pytest.mark.parametrize("alpha", [0.0, 0.25, 1.0])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_interp_axpy_sweep(shape, alpha, dtype):
+def test_interp_axpy_sweep(backend, shape, alpha, dtype):
     ks = jax.random.split(jax.random.PRNGKey(4), 2)
     a = jax.random.normal(ks[0], shape, dtype)
     b = jax.random.normal(ks[1], shape, dtype)
-    got = ops.interp_axpy(a, b, alpha)
+    got = dispatch.dispatch("interp_axpy", a, b, alpha, backend=backend)
     want = ref.interp_axpy_ref(a, b, alpha)
     tol = 2e-2 if dtype == jnp.bfloat16 else 1e-6
     np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
                                atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("backend", RESOLVABLE)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_backends_sweep(backend, causal):
+    """Every registered flash_attention backend vs the naive oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 128, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 128, 32), jnp.float32)
+    got = dispatch.dispatch("flash_attention", q, k, v, causal=causal,
+                            block_q=64, block_k=64, backend=backend)
+    want = ref.naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_vjp_bf16():
+    """The differentiable kernel wrapper holds bf16 inputs to bf16 tolerance."""
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 32), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 2, 128, 32), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 2, 128, 32), jnp.bfloat16)
+    got = ops.flash_attention_vjp(q, k, v, causal=True, block_q=64, block_k=64)
+    want = ref.naive_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=2e-2, rtol=2e-2)
+    grads = jax.grad(lambda q, k, v: jnp.sum(ops.flash_attention_vjp(
+        q, k, v, causal=True, block_q=64, block_k=64).astype(jnp.float32)),
+        argnums=(0, 1, 2))(q, k, v)
+    assert all(g.dtype == jnp.bfloat16 for g in grads)
