@@ -1,5 +1,10 @@
-"""Fault-tolerance demo: train, checkpoint, simulate preemption, resume on a
-DIFFERENT mesh layout (elastic re-shard on restore).
+"""Fault-tolerance demo, two acts:
+
+1. plain training: checkpoint, simulate preemption, resume on a DIFFERENT
+   mesh layout (elastic re-shard on restore);
+2. V-cycle training: SIGKILL-style preemption in the middle of the upward
+   sweep, then auto-resume at the exact (phase, level, step) -- the pending
+   de-coalesce/interpolate transition replays deterministically.
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
@@ -12,12 +17,18 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
-from repro.config import TrainConfig
+from repro.config import MultiLevelConfig, TrainConfig
 from repro.configs import get_config
-from repro.launch.train import make_batch_fn
+from repro.core.vcycle import VCycleRunner
+from repro.launch.train import make_batch_fn, make_vcycle_save_cb, train_vcycle_ckpt
 from repro.models.api import build_model, init_train_state, make_train_step
 
 CKPT = "/tmp/elastic_demo_ckpt"
+CKPT_VCYCLE = "/tmp/elastic_demo_vcycle_ckpt"
+
+
+class Preempted(RuntimeError):
+    """Stand-in for a SIGKILL: aborts the process mid-training."""
 
 
 def main():
@@ -57,5 +68,34 @@ def main():
           "deterministic data sharding made the resumed stream identical")
 
 
+def main_vcycle():
+    shutil.rmtree(CKPT_VCYCLE, ignore_errors=True)
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    tc = TrainConfig(steps=12, warmup_steps=1, batch_size=2, seq_len=16, log_every=4)
+    ml = MultiLevelConfig(n_levels=2, alpha=0.25, e_a_frac=0.25, e_small_frac=0.5)
+    cm = CheckpointManager(CKPT_VCYCLE)
+
+    print("== phase 1: V-cycle, checkpoint every 2 steps, die mid-upward-sweep ==")
+    runner = VCycleRunner(cfg, ml, tc, make_batch_fn(cfg, tc), seed=0, verbose=True)
+    save_cb = make_vcycle_save_cb(cm, schedule=runner.plan)
+
+    def killing_cb(state, params, opt_state):
+        save_cb(state, params, opt_state)
+        if state.phase == "up":
+            raise Preempted(f"preempted at global step {state.global_step}")
+
+    try:
+        runner.run(ckpt_cb=killing_cb, ckpt_every=2)
+    except Preempted as e:
+        cm.wait()  # a real SIGKILL relies on atomic publish instead
+        print(f"== {e}; restarting fresh ==")
+
+    print("== phase 2: auto-resume picks up inside the upward sweep ==")
+    out = train_vcycle_ckpt(cfg, ml, tc, ckpt=cm, ckpt_every=4)
+    print(f"finished: final loss {out.history.loss[-1]:.4f}, "
+          f"total FLOPs {out.total_flops:.3e}")
+
+
 if __name__ == "__main__":
     main()
+    main_vcycle()

@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# End-to-end preemption drill for the V-cycle launcher:
+#   1. start a real `python -m repro.launch.train --vcycle` run,
+#   2. SIGKILL it as soon as the first checkpoint is published,
+#   3. restart with identical args,
+#   4. require the "[vcycle] resumed at phase=... level=... seg_step=..." line.
+# Exercises the whole path -- CLI, CheckpointManager atomic publish, VCycleState
+# restore -- not just the library functions (see also
+# tests/test_system.py::test_vcycle_launcher_sigkill_resume).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+CKPT=$(mktemp -d)
+LOG=$(mktemp)
+trap 'rm -rf "$CKPT" "$LOG"' EXIT
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+ARGS=(--arch tinyllama-1.1b --smoke --vcycle --levels 2 --steps 40
+      --batch 2 --seq 16 --ckpt-dir "$CKPT" --ckpt-every 3)
+
+python -m repro.launch.train "${ARGS[@]}" >"$LOG" 2>&1 &
+PID=$!
+
+# wait (up to ~4 min) for the first atomic checkpoint publish
+for _ in $(seq 1 2400); do
+  [ -f "$CKPT/manifest.json" ] && break
+  kill -0 "$PID" 2>/dev/null || break
+  sleep 0.1
+done
+
+if kill -0 "$PID" 2>/dev/null; then
+  kill -9 "$PID"
+  wait "$PID" 2>/dev/null || true
+  echo "[smoke] SIGKILLed training after first checkpoint"
+else
+  echo "[smoke] WARNING: training exited before the kill; resume not exercised" >&2
+fi
+
+[ -f "$CKPT/manifest.json" ] || { echo "FAIL: no checkpoint was written"; tail -20 "$LOG"; exit 1; }
+
+OUT=$(python -m repro.launch.train "${ARGS[@]}")
+LINE=$(echo "$OUT" | grep -m1 "resumed at phase=") || {
+  echo "FAIL: restart did not print the resume line"; echo "$OUT" | tail -20; exit 1; }
+echo "PASS: $LINE"

@@ -15,9 +15,20 @@ Design (scaled-down but faithful to multi-host practice):
 * **Async**: ``save(..., blocking=False)`` snapshots to host memory
   synchronously (cheap) and writes files on a background thread, overlapping
   I/O with the next training steps.
-* **V-cycle aware**: arbitrary JSON metadata (level, phase, step, config hash)
-  rides along in the manifest; the launcher resumes mid-V-cycle.
-* **keep_last**: old steps are garbage-collected after a successful save.
+* **V-cycle aware**: arbitrary JSON metadata rides along in the manifest.
+  ``launch/train.py`` stores the full ``VCycleState`` addressing -- phase,
+  level, segment index, step-within-segment, global step, cumulative FLOPs,
+  the FLOPs-indexed history and which ``params_before`` stashes are present
+  (saved as extra ``params_before_<level>`` trees) -- so the launcher resumes
+  mid-V-cycle, including mid-upward-sweep, and replays the pending level
+  transition deterministically.
+* **Collision-free leaf names**: leaf paths are percent-encoded into file
+  names (v2 layout, flagged by a ``leafenc.json`` marker); a path component
+  containing a literal ``__`` (e.g. a ``w__gate`` leaf) round-trips exactly.
+  Pre-v2 directories (no marker; ``/`` encoded as ``__``) are still readable.
+* **keep_last**: old steps are garbage-collected after a successful save; the
+  directory the manifest currently references is never collected, whatever
+  its step number.
 """
 from __future__ import annotations
 
@@ -26,9 +37,16 @@ import os
 import shutil
 import threading
 from typing import Any, Dict, Optional
+from urllib.parse import quote, unquote
 
 import jax
 import numpy as np
+
+# v2 layout marker written into every tree dir: leaf paths are percent-encoded
+# ("/" -> "%2F", "%" -> "%25"), which is injective -- unlike the legacy
+# "/" -> "__" scheme that corrupted any leaf containing a literal "__".
+_LAYOUT_MARKER = "leafenc.json"
+_LAYOUT_VERSION = 2
 
 
 def _flatten(tree, prefix=""):
@@ -60,15 +78,21 @@ def save_tree(path: str, tree) -> None:
     os.makedirs(path, exist_ok=True)
     flat = _flatten(jax.device_get(tree))
     for k, v in flat.items():
-        fn = os.path.join(path, k.replace("/", "__") + ".npy")
+        fn = os.path.join(path, quote(k, safe="") + ".npy")
         np.save(fn, np.asarray(v), allow_pickle=False)
+    with open(os.path.join(path, _LAYOUT_MARKER), "w") as f:
+        json.dump({"version": _LAYOUT_VERSION, "encoding": "percent"}, f)
 
 
 def restore_tree(path: str, like, shardings=None):
+    if os.path.exists(os.path.join(path, _LAYOUT_MARKER)):
+        decode = unquote
+    else:  # legacy layout: "/" was stored as "__" (lossy for literal "__")
+        decode = lambda s: s.replace("__", "/")
     flat = {}
     for fn in os.listdir(path):
         if fn.endswith(".npy"):
-            key = fn[:-4].replace("__", "/")
+            key = decode(fn[:-4])
             flat[key] = np.load(os.path.join(path, fn), allow_pickle=False)
     tree = _unflatten_into(flat, like)
     if shardings is not None:
@@ -102,10 +126,28 @@ class CheckpointManager:
             return self._scan_fallback()
         return m
 
-    def _scan_fallback(self) -> Optional[Dict[str, Any]]:
-        cands = sorted(d for d in os.listdir(self.dir)
+    def _step_dirs(self) -> list:
+        """Published step dirs, oldest-publish first.
+
+        Ordered by mtime (name as tie-break), NOT by step number: a restarted
+        run with a shorter schedule publishes *smaller* step numbers than
+        stale dirs left by a longer previous schedule, and both GC and the
+        torn-manifest fallback must treat recency as publish order.
+        """
+
+        def key(d):
+            try:
+                mt = os.path.getmtime(os.path.join(self.dir, d))
+            except OSError:
+                mt = 0.0
+            return (mt, d)
+
+        return sorted((d for d in os.listdir(self.dir)
                        if d.startswith("step_") and not d.endswith(".tmp")
-                       and os.path.isdir(os.path.join(self.dir, d)))
+                       and os.path.isdir(os.path.join(self.dir, d))), key=key)
+
+    def _scan_fallback(self) -> Optional[Dict[str, Any]]:
+        cands = self._step_dirs()
         if not cands:
             return None
         d = cands[-1]
@@ -151,9 +193,20 @@ class CheckpointManager:
             self._thread = None
 
     def _gc(self) -> None:
-        steps = sorted(d for d in os.listdir(self.dir)
-                       if d.startswith("step_") and not d.endswith(".tmp"))
-        for d in steps[:-self.keep_last]:
+        # Keep the keep_last most recently *published* dirs (mtime order, so
+        # stale higher-numbered dirs from a longer previous schedule are
+        # reclaimed, not shielded by their names).  The manifest's current dir
+        # is sacrosanct regardless: it is the only checkpoint restore
+        # references.
+        current = None
+        try:
+            with open(self.manifest_path) as f:
+                current = json.load(f).get("dir")
+        except (OSError, ValueError):
+            pass
+        for d in self._step_dirs()[:-self.keep_last]:
+            if d == current:
+                continue
             shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
 
     # ---- restore --------------------------------------------------------

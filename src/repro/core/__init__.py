@@ -18,10 +18,14 @@ from repro.core.operators import (  # noqa: F401
 )
 from repro.core.vcycle import (  # noqa: F401
     History,
+    SegmentPlan,
     VCycleOutput,
+    VCycleRunner,
+    VCycleState,
     flops_to_reach,
     run_scratch,
     run_vcycle,
     saving_vs_baseline,
+    segments,
     train_segment,
 )

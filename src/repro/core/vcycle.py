@@ -9,6 +9,25 @@ elsewhere); the optimizer is re-initialized at transitions (paper §Discussion
 / App. C); and
 the whole V-cycle state (level, phase, step) is checkpointable via
 ``repro.checkpoint`` (see launch/train.py).
+
+The runner is an explicit state machine, not a straight-line script:
+
+* ``segments(cfg, ml, tc)`` materializes Algorithm 1 as a deterministic
+  schedule of :class:`SegmentPlan` entries -- the downward sweep (init-train
+  ``E_a`` per level, then coalesce), the upward sweep (train ``E_small``, then
+  de-coalesce + interpolate) and the final full-size segment.
+* :class:`VCycleState` carries everything needed to re-enter training at an
+  arbitrary (phase, level, step): segment index, step-within-segment, global
+  step, cumulative FLOPs, the :class:`History`, and the ``params_before``
+  stash consumed by Interpolation on the way back up.  Together with the
+  deterministic ``batch_fn(global_step)`` data order this makes mid-cycle
+  checkpoint/resume bit-identical to an uninterrupted run (see
+  ``launch/train.py`` for the save/restore wiring and ``tests/test_resume.py``
+  for the equivalence proof).
+* :class:`VCycleRunner` owns the per-level compiled-step cache: each level's
+  train step is ``jax.jit``-compiled at most once per run even though every
+  level below the top is visited twice (down + up sweep); ``n_compiles``
+  exposes the count for tests.
 """
 from __future__ import annotations
 
@@ -52,7 +71,10 @@ class History:
         return fl[window - 1:], sm
 
     def to_dict(self) -> Dict[str, list]:
-        return {"flops": self.flops, "loss": self.loss, "step": self.step, "level": self.level}
+        # copies, not views: async checkpoint writers serialize this dict on a
+        # background thread while the training loop keeps appending
+        return {"flops": list(self.flops), "loss": list(self.loss),
+                "step": list(self.step), "level": list(self.level)}
 
 
 def flops_to_reach(hist: History, target: float, window: int = 5) -> Optional[float]:
@@ -77,6 +99,44 @@ def saving_vs_baseline(base: History, ours: History, window: int = 5) -> Dict[st
 
 # ---------------------------------------------------------------------------
 # generic training segment
+
+
+def _train_loop(step_fn, batch_fn, steps: int, start_in_seg: int, params,
+                opt_state, history: History, cum: float, g: int, level: int,
+                fps: float, log_every: int, target_loss: Optional[float],
+                on_step=None):
+    """The one segment inner loop (shared by ``train_segment`` and
+    ``VCycleRunner``, so log cadence, FLOPs accounting and the smoothed
+    target-loss early stop cannot drift apart between the baselines and the
+    V-cycle).
+
+    ``g`` is the global step (keys the deterministic ``batch_fn``); ``i``
+    indexes within the segment (keys the log cadence), starting at
+    ``start_in_seg`` when resuming.  ``on_step(i, params, opt_state, cum, g,
+    stop)`` fires after each step's bookkeeping -- the runner hangs state
+    mirroring and checkpoint hooks there (``stop`` is the target-loss early
+    exit, which a checkpoint must not capture: the stop decision is not part
+    of the persisted state, so resuming from the stopping step would train
+    past it).
+    """
+    for i in range(start_in_seg, steps):
+        batch = batch_fn(g)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        cum += fps
+        g += 1
+        stop = False
+        if i % log_every == 0 or i == steps - 1:
+            loss = float(metrics["loss"])
+            history.log(cum, loss, g, level)
+            if target_loss is not None and len(history.loss) >= 5:
+                _, sm = history.smoothed(5)
+                if len(sm) and sm[-1] <= target_loss:
+                    stop = True
+        if on_step is not None:
+            on_step(i, params, opt_state, cum, g, stop)
+        if stop:
+            break
+    return params, opt_state, cum, g
 
 
 def train_segment(
@@ -105,25 +165,14 @@ def train_segment(
         step_fn = jax.jit(make_train_step(model, tc), donate_argnums=(0, 1))
     specs = model.specs()
     fps = flops_lib.train_step_flops(model.cfg, specs, tc.batch_size, tc.seq_len)
-    cum = start_flops
-    g = start_step
-    for i in range(steps):
-        batch = batch_fn(g)
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
-        cum += fps
-        g += 1
-        if i % tc.log_every == 0 or i == steps - 1:
-            loss = float(metrics["loss"])
-            history.log(cum, loss, g, level)
-            if target_loss is not None and len(history.loss) >= 5:
-                _, sm = history.smoothed(5)
-                if len(sm) and sm[-1] <= target_loss:
-                    break
+    params, opt_state, cum, g = _train_loop(
+        step_fn, batch_fn, steps, 0, params, opt_state, history,
+        start_flops, start_step, level, fps, tc.log_every, target_loss)
     return params, opt_state, history, cum, g
 
 
 # ---------------------------------------------------------------------------
-# the V-cycle (Algorithm 1)
+# the V-cycle (Algorithm 1) as an explicit, checkpointable state machine
 
 
 @dataclasses.dataclass
@@ -132,6 +181,178 @@ class VCycleOutput:
     history: History
     configs: List[ModelConfig]
     total_flops: float
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentPlan:
+    """One training segment of Algorithm 1.
+
+    The transition *after* a segment is implied by its phase: ``down`` stashes
+    ``params_before[level]`` and coalesces to ``level + 1``; ``up``
+    de-coalesces to ``level - 1`` and interpolates with the stash; ``final``
+    has no successor.
+    """
+
+    phase: str  # "down" | "up" | "final"
+    level: int
+    steps: int
+
+
+def segments(cfg: ModelConfig, ml: MultiLevelConfig, tc: TrainConfig,
+             *, final_steps: Optional[int] = None) -> List[SegmentPlan]:
+    """Deterministic segment schedule for Algorithm 1.
+
+    Step budgets follow the paper: E_a = warmup-sized init segment per level
+    before coalescing; E_small = one half of the full cycle for every level
+    below the top; the top level then trains until convergence (``tc.steps``
+    or ``final_steps``, optionally cut short by a target loss).  ``cfg`` is
+    part of the signature so per-architecture budget rules can slot in without
+    changing call sites.
+    """
+    del cfg  # schedule currently depends only on (ml, tc)
+    K = ml.n_levels
+    E_a = max(int(round(tc.steps * ml.e_a_frac)), 1)
+    E_small = max(int(round(tc.steps * ml.e_small_frac)), 1)
+    plan = [SegmentPlan("down", l, E_a) for l in range(K - 1)]
+    plan += [SegmentPlan("up", l, E_small) for l in range(K - 1, 0, -1)]
+    plan.append(SegmentPlan("final", 0,
+                            final_steps if final_steps is not None else tc.steps))
+    return plan
+
+
+@dataclasses.dataclass
+class VCycleState:
+    """Everything needed to re-enter ``VCycleRunner.run`` at an arbitrary
+    (phase, level, step).
+
+    ``seg_index``/``seg_step`` address the position in the segment schedule
+    (``seg_step`` counts completed optimizer steps *within* the current
+    segment, so logging cadence and the post-segment transition replay
+    identically on resume); ``params_before`` maps level -> the stashed
+    pre-coalesce params that Interpolation consumes on the upward sweep.
+    ``phase``/``level`` duplicate the schedule entry for checkpoint metadata
+    and log lines.
+    """
+
+    phase: str = "down"
+    level: int = 0
+    seg_index: int = 0
+    seg_step: int = 0
+    global_step: int = 0
+    cum_flops: float = 0.0
+    history: History = dataclasses.field(default_factory=History)
+    params_before: Dict[int, Any] = dataclasses.field(default_factory=dict)
+
+
+class VCycleRunner:
+    """Checkpointable driver for Algorithm 1.
+
+    Owns the per-level model stack and a per-level compiled train-step cache:
+    each level's step is built and ``jax.jit``-compiled at most once per run
+    even though levels below the top are visited twice (down + up sweep).
+    ``run`` may be entered fresh or from a restored :class:`VCycleState`; a
+    ``ckpt_cb(state, params, opt_state)`` hook fires every ``ckpt_every``
+    global steps (the launcher plugs ``repro.checkpoint`` in there).
+    """
+
+    def __init__(self, cfg: ModelConfig, ml: MultiLevelConfig, tc: TrainConfig,
+                 batch_fn: Callable[[int], Dict[str, jax.Array]], *,
+                 seed: int = 0, target_loss: Optional[float] = None,
+                 final_steps: Optional[int] = None, verbose: bool = False):
+        self.ml, self.tc, self.batch_fn = ml, tc, batch_fn
+        self.seed, self.target_loss, self.verbose = seed, target_loss, verbose
+        self.cfgs = [cfg]
+        for _ in range(ml.n_levels - 1):
+            self.cfgs.append(ops.coalesce_config(self.cfgs[-1], ml))
+        self.models = [build_model(c) for c in self.cfgs]
+        self.specs = [m.specs() for m in self.models]
+        self.plan = segments(cfg, ml, tc, final_steps=final_steps)
+        self.state: Optional[VCycleState] = None
+        self._step_fns: Dict[int, Callable] = {}
+        self.n_compiles = 0  # probe: must end up == #levels visited
+
+    def step_fn(self, level: int) -> Callable:
+        """The compiled train step for ``level`` (built once, then cached)."""
+        fn = self._step_fns.get(level)
+        if fn is None:
+            fn = jax.jit(make_train_step(self.models[level], self.tc),
+                         donate_argnums=(0, 1))
+            self._step_fns[level] = fn
+            self.n_compiles += 1
+        return fn
+
+    def init_state(self) -> Tuple[VCycleState, Any]:
+        """Fresh (state, params) for an uninterrupted run."""
+        return VCycleState(), self.models[0].init(jax.random.PRNGKey(self.seed))
+
+    def _transition(self, state: VCycleState, plan: SegmentPlan, params):
+        """Apply the post-segment operator (Alg. 1 lines 3-4 / 7-9)."""
+        l = plan.level
+        if plan.phase == "down":
+            state.params_before[l] = params
+            if self.verbose:
+                print(f"[vcycle] level {l} init-trained {plan.steps} steps, coalescing")
+            return ops.make_coalesce_fn(self.specs[l], self.cfgs[l], self.ml)(params)
+        if plan.phase == "up":
+            if self.verbose:
+                print(f"[vcycle] level {l} trained {plan.steps} steps, de-coalescing")
+            de = ops.make_decoalesce_fn(self.specs[l - 1], self.cfgs[l - 1], self.ml)(params)
+            # pop, don't read: the stash is consumed here, and dropping it
+            # keeps later checkpoints from re-serializing dead full-size trees
+            before = state.params_before.pop(l - 1)
+            return ops.make_interpolate_fn(
+                self.ml.alpha, backend=self.cfgs[l - 1].kernel_backend or None)(
+                before, de)
+        return params
+
+    def run(self, *, state: Optional[VCycleState] = None, params=None,
+            opt_state=None, ckpt_cb=None, ckpt_every: int = 0) -> VCycleOutput:
+        """Run (or resume) the V-cycle to completion.
+
+        Fresh run: call with no arguments.  Resume: pass the restored
+        ``state`` + ``params`` (+ ``opt_state`` when mid-segment).  Data
+        order is keyed on ``state.global_step``, checkpoints always capture
+        the in-segment, pre-transition view, and transitions are
+        deterministically replayed from it -- so a resumed run is equivalent
+        to an uninterrupted one.
+        """
+        if state is None:
+            state, params = self.init_state()
+        elif params is None:
+            raise ValueError("resuming from a VCycleState requires params")
+        self.state = state
+        tc = self.tc
+        while state.seg_index < len(self.plan):
+            plan = self.plan[state.seg_index]
+            state.phase, state.level = plan.phase, plan.level
+            fn = self.step_fn(plan.level)
+            if opt_state is None:  # re-init at transitions (paper App. C)
+                opt_state = adamw_init(params, tc)
+            fps = flops_lib.train_step_flops(
+                self.cfgs[plan.level], self.specs[plan.level],
+                tc.batch_size, tc.seq_len)
+
+            def on_step(i, p, o, cum, g, stopping):
+                state.cum_flops, state.global_step = cum, g
+                state.seg_step = i + 1
+                # never checkpoint the stopping step: a restart from it would
+                # resume into training the early exit already cut off
+                if (ckpt_cb is not None and ckpt_every and not stopping
+                        and g % ckpt_every == 0):
+                    ckpt_cb(state, p, o)
+
+            params, opt_state, state.cum_flops, state.global_step = _train_loop(
+                fn, self.batch_fn, plan.steps, state.seg_step, params,
+                opt_state, state.history, state.cum_flops, state.global_step,
+                plan.level, fps, tc.log_every,
+                self.target_loss if plan.phase == "final" else None,
+                on_step=on_step)
+            params = self._transition(state, plan, params)
+            state.seg_index += 1
+            state.seg_step = 0
+            opt_state = None
+        return VCycleOutput(params=params, history=state.history,
+                            configs=self.cfgs, total_flops=state.cum_flops)
 
 
 def run_vcycle(
@@ -145,55 +366,17 @@ def run_vcycle(
     final_steps: Optional[int] = None,
     verbose: bool = False,
 ) -> VCycleOutput:
-    """Paper Algorithm 1.
+    """Paper Algorithm 1 (thin wrapper over :class:`VCycleRunner`).
 
     Step budgets follow the paper: E_a = warmup-sized init segment per level
     before coalescing; E_small = one half of the full cycle for every level
     below the top; the top level then trains until convergence (here: until
     ``target_loss`` or ``final_steps``/``tc.steps``).
     """
-    K = ml.n_levels
-    cfgs = [cfg]
-    for _ in range(K - 1):
-        cfgs.append(ops.coalesce_config(cfgs[-1], ml))
-    models = [build_model(c) for c in cfgs]
-    specs = [m.specs() for m in models]
-    E_a = max(int(round(tc.steps * ml.e_a_frac)), 1)
-    E_small = max(int(round(tc.steps * ml.e_small_frac)), 1)
-
-    hist = History()
-    cum, g = 0.0, 0
-    params_before: List[Any] = [None] * K
-
-    # ---- downward sweep: init-train E_a then coalesce (Alg. 1 lines 1-4)
-    params = models[0].init(jax.random.PRNGKey(seed))
-    for l in range(K - 1):
-        params, _, hist, cum, g = train_segment(
-            models[l], tc, batch_fn, E_a, params=params, history=hist,
-            start_flops=cum, start_step=g, level=l, seed=seed)
-        params_before[l] = params
-        if verbose:
-            print(f"[vcycle] level {l} init-trained {E_a} steps, coalescing")
-        params = ops.make_coalesce_fn(specs[l], cfgs[l], ml)(params)
-
-    # ---- upward sweep: train E_small, de-coalesce, interpolate (lines 5-9)
-    for l in range(K - 1, 0, -1):
-        params, _, hist, cum, g = train_segment(
-            models[l], tc, batch_fn, E_small, params=params, history=hist,
-            start_flops=cum, start_step=g, level=l, seed=seed)
-        if verbose:
-            print(f"[vcycle] level {l} trained {E_small} steps, de-coalescing")
-        de = ops.make_decoalesce_fn(specs[l - 1], cfgs[l - 1], ml)(params)
-        params = ops.make_interpolate_fn(
-            ml.alpha, backend=cfgs[l - 1].kernel_backend or None)(
-            params_before[l - 1], de)
-
-    # ---- final: train M_1 until convergence (line 10)
-    fs = final_steps if final_steps is not None else tc.steps
-    params, _, hist, cum, g = train_segment(
-        models[0], tc, batch_fn, fs, params=params, history=hist,
-        start_flops=cum, start_step=g, level=0, seed=seed, target_loss=target_loss)
-    return VCycleOutput(params=params, history=hist, configs=cfgs, total_flops=cum)
+    runner = VCycleRunner(cfg, ml, tc, batch_fn, seed=seed,
+                          target_loss=target_loss, final_steps=final_steps,
+                          verbose=verbose)
+    return runner.run()
 
 
 def run_scratch(

@@ -4,8 +4,11 @@ Runs real training (proxy/smoke scale on this CPU container; the same code
 path drives a sharded mesh via ``--mesh``), with:
 
 * V-cycle multi-level schedule (``--vcycle``) or plain from-scratch,
-* fault tolerance: atomic checkpointing every ``--ckpt-every`` steps with
-  auto-resume (includes V-cycle level/phase), async saves,
+* fault tolerance: atomic async checkpointing every ``--ckpt-every`` steps
+  with auto-resume; V-cycle runs save and restore the full mid-cycle state
+  (phase, level, step-within-segment, FLOPs history, interpolation stashes),
+  so a SIGKILL at any point -- including mid-upward-sweep -- resumes
+  equivalently to an uninterrupted run (scripts/smoke_resume.sh drills this),
 * deterministic host-sharded synthetic data (any host can regenerate any
   shard -> straggler/elastic-safe),
 * a step-time watchdog that flags stragglers (steps slower than
@@ -33,8 +36,10 @@ from repro.config import SHAPES, MultiLevelConfig, TrainConfig
 from repro.configs import get_config
 from repro.core import flops as flops_lib
 from repro.core import operators as ops
+from repro.core.vcycle import History, VCycleOutput, VCycleRunner, VCycleState
 from repro.data import MarkovLM, lm_batch, masked_lm_batch, vision_batch
-from repro.models.api import build_model, init_train_state, make_train_step
+from repro.models.api import (build_model, init_train_state, make_train_step,
+                              zero_train_state)
 from repro.optim import adamw_init
 
 
@@ -100,9 +105,13 @@ def train_plain(cfg, tc: TrainConfig, *, ckpt: Optional[CheckpointManager],
     for i in range(start, tc.steps):
         t0 = time.time()
         params, opt, metrics = step_fn(params, opt, batch_fn(i))
+        # heartbeat EVERY step (a straggler on a non-log step must be seen);
+        # block on device completion only -- the host metric fetch stays on
+        # log steps
+        jax.block_until_ready(metrics["loss"])
+        wd.observe(time.time() - t0)
         if i % tc.log_every == 0:
-            loss = float(metrics["loss"])  # blocks; doubles as heartbeat
-            wd.observe(time.time() - t0)
+            loss = float(metrics["loss"])
             if verbose:
                 print(f"[train] step {i} loss {loss:.4f} lr {float(metrics['lr']):.2e}")
         if ckpt is not None and ckpt_every and i and i % ckpt_every == 0:
@@ -113,16 +122,130 @@ def train_plain(cfg, tc: TrainConfig, *, ckpt: Optional[CheckpointManager],
     return params
 
 
-def train_vcycle_ckpt(cfg, ml: MultiLevelConfig, tc: TrainConfig, *,
-                      ckpt: Optional[CheckpointManager], ckpt_every: int):
-    """V-cycle with phase-aware checkpointing: (phase, level, step) resume."""
-    from repro.core.vcycle import run_vcycle
+def _schedule_meta(plan) -> list:
+    """JSON form of a segment schedule, stored with every mid-cycle
+    checkpoint so restore can refuse a mismatched (phase, level, step)
+    addressing instead of silently training the wrong schedule."""
+    return [[p.phase, p.level, p.steps] for p in plan]
 
+
+def make_vcycle_save_cb(ckpt: CheckpointManager, schedule=None):
+    """A ``VCycleRunner`` checkpoint hook writing the full resumable state.
+
+    Array payload: the in-segment ``params`` + ``opt`` plus every stashed
+    ``params_before_<level>`` tree (needed by Interpolation on the upward
+    sweep).  Manifest metadata: (phase, level, seg_index, seg_step,
+    global_step, cum_flops, stashed_levels, history) plus the segment
+    ``schedule`` (pass the runner's ``plan``) that anchors those indices.
+    Saves are async -- ``CheckpointManager`` snapshots to host before the
+    training loop mutates anything.
+    """
+    sched = _schedule_meta(schedule) if schedule is not None else None
+
+    def save_cb(state: VCycleState, params, opt_state) -> None:
+        stashed = sorted(state.params_before)
+        payload = {"params": params, "opt": opt_state,
+                   **{f"params_before_{l}": state.params_before[l] for l in stashed}}
+        meta = {
+            "step": state.global_step, "phase": state.phase, "level": state.level,
+            "seg_index": state.seg_index, "seg_step": state.seg_step,
+            "global_step": state.global_step, "cum_flops": state.cum_flops,
+            "stashed_levels": stashed, "history": state.history.to_dict()}
+        if sched is not None:
+            meta["schedule"] = sched
+        ckpt.save(state.global_step, payload, meta=meta, blocking=False)
+
+    return save_cb
+
+
+def restore_vcycle_state(ckpt: CheckpointManager, runner: VCycleRunner,
+                         tc: TrainConfig):
+    """(state, params, opt_state) from the newest mid-cycle checkpoint.
+
+    Inverse of :func:`make_vcycle_save_cb`: like-trees come from
+    ``zero_train_state`` of the checkpointed level's model, so no RNG or
+    training work happens before the arrays land.  Raises ``ValueError`` if
+    the checkpoint's segment schedule (or position) does not fit ``runner``'s
+    -- resuming a checkpoint under different ``--steps``/``--levels`` would
+    otherwise silently train the wrong schedule.
+    """
+    m = ckpt.latest()
+    meta = m["meta"]
+    current = _schedule_meta(runner.plan)
+    saved = meta.get("schedule")
+    if saved is not None and [list(s) for s in saved] != current:
+        raise ValueError(
+            f"checkpoint was written under a different V-cycle schedule "
+            f"({saved} vs current {current}); restart with the original "
+            f"--steps/--levels or use a fresh --ckpt-dir")
+    seg_index = int(meta["seg_index"])
+    if (seg_index >= len(runner.plan)
+            or int(meta["seg_step"]) > runner.plan[seg_index].steps):
+        raise ValueError(
+            f"checkpoint position (seg_index={seg_index}, "
+            f"seg_step={meta['seg_step']}) lies outside the current schedule "
+            f"{current}; restart with the original --steps/--levels")
+    level = int(meta["level"])
+    like_p, like_o = zero_train_state(runner.models[level], tc)
+    like = {"params": like_p, "opt": like_o}
+    stashed = [int(l) for l in meta.get("stashed_levels", [])]
+    for l in stashed:
+        like[f"params_before_{l}"] = zero_train_state(runner.models[l], tc)[0]
+    restored, meta = ckpt.restore(like)
+    state = VCycleState(
+        phase=meta["phase"], level=level,
+        seg_index=int(meta["seg_index"]), seg_step=int(meta["seg_step"]),
+        global_step=int(meta["global_step"]), cum_flops=float(meta["cum_flops"]),
+        history=History(**{k: list(v) for k, v in meta["history"].items()}),
+        params_before={l: restored[f"params_before_{l}"] for l in stashed})
+    return state, restored["params"], restored["opt"]
+
+
+def train_vcycle_ckpt(cfg, ml: MultiLevelConfig, tc: TrainConfig, *,
+                      ckpt: Optional[CheckpointManager], ckpt_every: int,
+                      verbose: bool = True):
+    """V-cycle with real (phase, level, step) checkpoint/resume.
+
+    Every ``ckpt_every`` global steps the runner's hook saves
+    ``{params, opt, params_before_*}`` + V-cycle state metadata (async,
+    atomic).  On restart this function restores the newest checkpoint and
+    re-enters ``VCycleRunner.run`` at the exact (phase, level, seg_step) --
+    including mid-upward-sweep, where the pending de-coalesce/interpolate
+    transition is replayed deterministically from the in-segment params.
+    Deterministic ``batch_fn(global_step)`` data order makes the resumed run
+    equivalent to an uninterrupted one (tests/test_resume.py asserts
+    allclose on final params and History).  A terminal "phase=done"
+    checkpoint makes re-invocation after completion a no-op.
+    """
     batch_fn = make_batch_fn(cfg, tc)
-    out = run_vcycle(cfg, ml, tc, batch_fn, seed=tc.seed, verbose=True)
+    runner = VCycleRunner(cfg, ml, tc, batch_fn, seed=tc.seed, verbose=verbose)
+    state = params = opt = None
     if ckpt is not None:
-        ckpt.save(tc.steps, {"params": out.params},
-                  meta={"step": tc.steps, "phase": "done", "level": 0,
+        m = ckpt.latest()
+        meta = (m or {}).get("meta", {})
+        if "phase" in meta:
+            if meta["phase"] == "done":
+                like_p, _ = zero_train_state(runner.models[0], tc)
+                restored, _ = ckpt.restore({"params": like_p})
+                print("[vcycle] checkpoint already complete; returning saved params")
+                return VCycleOutput(
+                    params=restored["params"],
+                    history=History(**{k: list(v) for k, v in
+                                       meta.get("history", {}).items()}),
+                    configs=runner.cfgs,
+                    total_flops=float(meta.get("cum_flops", 0.0)))
+            state, params, opt = restore_vcycle_state(ckpt, runner, tc)
+            print(f"[vcycle] resumed at phase={state.phase} level={state.level} "
+                  f"seg_step={state.seg_step} global_step={state.global_step}")
+    out = runner.run(state=state, params=params, opt_state=opt,
+                     ckpt_cb=(make_vcycle_save_cb(ckpt, schedule=runner.plan)
+                              if ckpt is not None else None),
+                     ckpt_every=ckpt_every)
+    if ckpt is not None:
+        gs = runner.state.global_step
+        ckpt.save(gs, {"params": out.params},
+                  meta={"step": gs, "phase": "done", "level": 0,
+                        "global_step": gs, "cum_flops": out.total_flops,
                         "history": out.history.to_dict()})
     print(f"[vcycle] total training FLOPs: {out.total_flops:.3e}")
     return out

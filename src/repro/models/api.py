@@ -188,3 +188,18 @@ def init_train_state(model: Model, tc: TrainConfig, key: jax.Array):
 def train_state_specs(model: Model, tc: TrainConfig):
     ps = model.specs()
     return ps, adamw_init_specs(ps, tc)
+
+
+def zero_train_state(model: Model, tc: TrainConfig):
+    """Zero-filled (params, opt_state) with the exact structure/shape/dtype of
+    ``init_train_state`` -- cheap "like" trees for checkpoint restore (no RNG,
+    no init math, no model trace)."""
+    from repro.param import is_spec
+
+    ps, opt_specs = train_state_specs(model, tc)
+    params = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype or model.cfg.param_dtype),
+        ps, is_leaf=is_spec)
+    opt_state = jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), opt_specs, is_leaf=is_spec)
+    return params, opt_state

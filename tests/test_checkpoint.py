@@ -41,6 +41,58 @@ def test_async_save_and_keep_last(tmp_path):
     assert cm.latest()["step"] == 4
 
 
+def test_leaf_names_with_literal_double_underscore(tmp_path):
+    """v2 layout: leaf paths are percent-encoded, so a literal ``__`` in a
+    leaf name no longer collides with the path separator (the legacy scheme
+    mapped both ``w/gate`` and ``w__gate`` to the same file)."""
+    cm = CheckpointManager(str(tmp_path))
+    st = {"params": {"w__gate": jnp.arange(4.0),
+                     "w": {"gate": jnp.full((4,), 7.0)}}}
+    cm.save(1, st, meta={"step": 1})
+    out, _ = cm.restore(jax.tree.map(jnp.zeros_like, st))
+    np.testing.assert_array_equal(np.asarray(out["params"]["w__gate"]),
+                                  np.arange(4.0))
+    np.testing.assert_array_equal(np.asarray(out["params"]["w"]["gate"]),
+                                  np.full((4,), 7.0))
+
+
+def test_restore_legacy_leaf_layout(tmp_path):
+    """Pre-v2 checkpoints ('/' stored as '__', no leafenc marker) stay
+    readable."""
+    d = tmp_path / "step_00000001" / "params"
+    os.makedirs(d)
+    np.save(str(d / "a__b.npy"), np.arange(3.0))
+    with open(tmp_path / "step_00000001" / "meta.json", "w") as f:
+        json.dump({"step": 1}, f)
+    with open(tmp_path / "manifest.json", "w") as f:
+        json.dump({"dir": "step_00000001", "step": 1, "meta": {"step": 1}}, f)
+    cm = CheckpointManager(str(tmp_path))
+    out, meta = cm.restore({"params": {"a": {"b": jnp.zeros(3)}}})
+    assert meta["step"] == 1
+    np.testing.assert_array_equal(np.asarray(out["params"]["a"]["b"]),
+                                  np.arange(3.0))
+
+
+def test_gc_never_removes_manifest_dir(tmp_path):
+    """Regression: a resumed run can publish a smaller step number than stale
+    dirs from a longer previous schedule.  keep-last GC must never collect the
+    directory the manifest references -- and must reclaim the stale
+    higher-numbered dirs rather than shield them by name."""
+    import time
+
+    cm = CheckpointManager(str(tmp_path), keep_last=1)
+    st = make_state()
+    cm.save(5, st, meta={"step": 5})
+    time.sleep(0.02)  # distinct publish mtimes
+    cm.save(3, st, meta={"step": 3})  # lexicographically older than step_5
+    m = cm.latest()
+    assert m["step"] == 3
+    assert os.path.isdir(os.path.join(str(tmp_path), m["dir"]))
+    assert not os.path.isdir(os.path.join(str(tmp_path), "step_00000005"))
+    out, meta = cm.restore(jax.tree.map(jnp.zeros_like, st))
+    assert meta["step"] == 3
+
+
 def test_torn_manifest_recovery(tmp_path):
     cm = CheckpointManager(str(tmp_path))
     st = make_state()

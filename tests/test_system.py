@@ -1,9 +1,12 @@
 """End-to-end behaviour tests for the paper's system: the V-cycle actually
 saves compute on a learnable task; the paper's key ablation directions hold
-(Appendix D/F/G at proxy scale); serving works; the launcher resumes."""
+(Appendix D/F/G at proxy scale); serving works; the launcher resumes (plain
+and mid-V-cycle, including after SIGKILL); the watchdog sees every step."""
+import signal
 import subprocess
 import sys
 import os
+import time
 
 import jax
 import numpy as np
@@ -114,3 +117,61 @@ def test_train_launcher_resumes(tmp_path):
                         env=env, cwd=root, timeout=300)
     assert r2.returncode == 0, r2.stderr[-1500:]
     assert "resumed from step" in r2.stdout
+
+
+def test_watchdog_observes_slow_step():
+    from repro.launch.train import Watchdog
+
+    wd = Watchdog(factor=3.0)
+    assert not any(wd.observe(0.01) for _ in range(10))
+    assert wd.observe(0.1) is True  # 10x the median -> flagged
+    assert wd.flagged == 1
+
+
+def test_train_plain_heartbeats_every_step(monkeypatch):
+    """Regression: with log_every > 1 the watchdog used to see only every
+    log_every-th step, hiding most stragglers."""
+    import repro.launch.train as T
+
+    seen = []
+    orig = T.Watchdog.observe
+
+    def spying(self, dt):
+        seen.append(dt)
+        return orig(self, dt)
+
+    monkeypatch.setattr(T.Watchdog, "observe", spying)
+    cfg = tiny_dense(d_model=32, d_ff=64, vocab_size=128)
+    tc = fast_tc(steps=5, log_every=10)
+    T.train_plain(cfg, tc, ckpt=None, ckpt_every=0, verbose=False)
+    assert len(seen) == 5
+
+
+@pytest.mark.slow
+def test_vcycle_launcher_sigkill_resume(tmp_path):
+    """The real CLI path: start a V-cycle run, SIGKILL it once the first
+    checkpoint lands, restart with identical args and require the
+    (phase, level, step) resume line."""
+    env = dict(os.environ, PYTHONPATH="src")
+    root = os.path.join(os.path.dirname(__file__), "..")
+    args = [sys.executable, "-m", "repro.launch.train", "--arch", "tinyllama-1.1b",
+            "--smoke", "--vcycle", "--levels", "2", "--steps", "40",
+            "--batch", "2", "--seq", "16",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "3"]
+    p = subprocess.Popen(args, env=env, cwd=root, stdout=subprocess.DEVNULL,
+                         stderr=subprocess.DEVNULL)
+    manifest = os.path.join(str(tmp_path), "manifest.json")
+    deadline = time.time() + 240
+    try:
+        while (time.time() < deadline and p.poll() is None
+               and not os.path.exists(manifest)):
+            time.sleep(0.05)
+        assert os.path.exists(manifest), "no checkpoint before timeout/exit"
+    finally:
+        if p.poll() is None:
+            os.kill(p.pid, signal.SIGKILL)
+        p.wait(timeout=60)
+    r = subprocess.run(args, capture_output=True, text=True, env=env, cwd=root,
+                       timeout=300)
+    assert r.returncode == 0, r.stderr[-1500:]
+    assert "resumed at phase=" in r.stdout, r.stdout[-1500:]
