@@ -4,7 +4,11 @@
    mesh layout (elastic re-shard on restore);
 2. V-cycle training: SIGKILL-style preemption in the middle of the upward
    sweep, then auto-resume at the exact (phase, level, step) -- the pending
-   de-coalesce/interpolate transition replays deterministically.
+   de-coalesce/interpolate transition replays deterministically, with the
+   resumed run re-sharded onto a mesh (elastic mid-V-cycle re-shard).
+
+For the real CLI versions: `--mesh DxM` + SIGKILL/SIGTERM drills live in
+scripts/smoke_resume.sh and tests/test_system.py.
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
@@ -90,8 +94,15 @@ def main_vcycle():
         cm.wait()  # a real SIGKILL relies on atomic publish instead
         print(f"== {e}; restarting fresh ==")
 
-    print("== phase 2: auto-resume picks up inside the upward sweep ==")
-    out = train_vcycle_ckpt(cfg, ml, tc, ckpt=cm, ckpt_every=4)
+    print("== phase 2: auto-resume picks up inside the upward sweep, and "
+          "re-shards onto a mesh while doing it ==")
+    # elastic mid-V-cycle re-shard: the checkpoint was written UNSHARDED, but
+    # the resumed run is mesh-parallel -- params, opt and the stashed
+    # params_before_* trees all land on the mesh layouts (the container has 1
+    # CPU device, so 1x1; the mechanism is identical for any DxM -- the
+    # launcher's `--mesh 2x1` does exactly this after a `--mesh 1x2` save)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    out = train_vcycle_ckpt(cfg, ml, tc, ckpt=cm, ckpt_every=4, mesh=mesh)
     print(f"finished: final loss {out.history.loss[-1]:.4f}, "
           f"total FLOPs {out.total_flops:.3e}")
 

@@ -1,18 +1,30 @@
 #!/usr/bin/env bash
-# End-to-end preemption drill for the V-cycle launcher:
+# End-to-end preemption drills for the launcher, two acts:
+#
+# Act 1 -- SIGKILL (no notice):
 #   1. start a real `python -m repro.launch.train --vcycle` run,
 #   2. SIGKILL it as soon as the first checkpoint is published,
 #   3. restart with identical args,
 #   4. require the "[vcycle] resumed at phase=... level=... seg_step=..." line.
+#
+# Act 2 -- SIGTERM (preemption notice):
+#   1. start a plain run whose --ckpt-every cadence can never fire,
+#   2. SIGTERM it mid-training,
+#   3. require exit 0, the "[preempt]" final BLOCKING checkpoint, and a
+#      restart that resumes from exactly that save.
+#
 # Exercises the whole path -- CLI, CheckpointManager atomic publish, VCycleState
-# restore -- not just the library functions (see also
-# tests/test_system.py::test_vcycle_launcher_sigkill_resume).
+# restore, PreemptionGuard -- not just the library functions (see also
+# tests/test_system.py::test_vcycle_launcher_sigkill_resume and
+# ::test_vcycle_launcher_sigterm_checkpoints).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 CKPT=$(mktemp -d)
 LOG=$(mktemp)
-trap 'rm -rf "$CKPT" "$LOG"' EXIT
+CKPT2=$(mktemp -d)
+LOG2=$(mktemp)
+trap 'rm -rf "$CKPT" "$LOG" "$CKPT2" "$LOG2"' EXIT
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 ARGS=(--arch tinyllama-1.1b --smoke --vcycle --levels 2 --steps 40
@@ -41,4 +53,34 @@ fi
 OUT=$(python -m repro.launch.train "${ARGS[@]}")
 LINE=$(echo "$OUT" | grep -m1 "resumed at phase=") || {
   echo "FAIL: restart did not print the resume line"; echo "$OUT" | tail -20; exit 1; }
-echo "PASS: $LINE"
+echo "PASS (act 1): $LINE"
+
+# ----- Act 2: SIGTERM preemption-aware checkpoint ---------------------------
+# cadence (10000) never fires within 300 steps: the ONLY way a checkpoint can
+# exist is the SIGTERM handler's final blocking save
+ARGS2=(--arch tinyllama-1.1b --smoke --steps 300 --batch 2 --seq 16
+       --ckpt-dir "$CKPT2" --ckpt-every 10000)
+
+python -m repro.launch.train "${ARGS2[@]}" >"$LOG2" 2>&1 &
+PID2=$!
+
+# wait (up to ~4 min) until training is demonstrably stepping
+for _ in $(seq 1 2400); do
+  grep -q "\[train\] step" "$LOG2" 2>/dev/null && break
+  kill -0 "$PID2" 2>/dev/null || break
+  sleep 0.1
+done
+
+kill -0 "$PID2" 2>/dev/null || {
+  echo "FAIL: training exited before SIGTERM could be delivered"; tail -20 "$LOG2"; exit 1; }
+kill -TERM "$PID2"
+RC=0; wait "$PID2" || RC=$?
+[ "$RC" -eq 0 ] || { echo "FAIL: SIGTERM exit code $RC (want clean 0)"; tail -20 "$LOG2"; exit 1; }
+grep -q "\[preempt\] SIGTERM: final checkpoint" "$LOG2" || {
+  echo "FAIL: no preemption checkpoint line"; tail -20 "$LOG2"; exit 1; }
+[ -f "$CKPT2/manifest.json" ] || { echo "FAIL: SIGTERM wrote no checkpoint"; exit 1; }
+
+OUT2=$(python -m repro.launch.train "${ARGS2[@]}")
+LINE2=$(echo "$OUT2" | grep -m1 "resumed from step") || {
+  echo "FAIL: restart did not resume from the preemption save"; echo "$OUT2" | tail -20; exit 1; }
+echo "PASS (act 2): $LINE2"

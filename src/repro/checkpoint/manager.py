@@ -96,7 +96,13 @@ def restore_tree(path: str, like, shardings=None):
             flat[key] = np.load(os.path.join(path, fn), allow_pickle=False)
     tree = _unflatten_into(flat, like)
     if shardings is not None:
-        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+        # elastic re-shard: checkpoints hold logical (unsharded) arrays, so a
+        # save from mesh A lands on mesh B here; cast to the like-tree dtype
+        # exactly as the unsharded branch does
+        tree = jax.tree.map(
+            lambda x, l, s: jax.device_put(np.asarray(x).astype(
+                l.dtype if hasattr(l, "dtype") else x.dtype), s),
+            tree, like, shardings)
     else:
         tree = jax.tree.map(
             lambda x, l: jax.device_put(np.asarray(x).astype(

@@ -160,8 +160,17 @@ def _stack_coalesce(w: jax.Array, dim: int, w0: float, backend) -> jax.Array:
 def _stack_decoalesce(w: jax.Array, dim: int, w0: float) -> jax.Array:
     """Matrix-free "stack"-variant de-coalescing: T duplication is a pure
     gather -- tile the halved axis twice, scaled by the paper's normalization
-    weight (T_out rows are 1.0, T_in rows 0.5)."""
-    dup = jnp.concatenate([w, w], axis=dim)
+    weight (T_out rows are 1.0, T_in rows 0.5).
+
+    Duplication is broadcast+reshape, NOT ``concatenate([w, w])``: XLA's SPMD
+    partitioner miscompiles a concat whose operands alias the same *sharded*
+    tensor (the halves get summed -- jaxlib 0.4.37 CPU/GSPMD), and the
+    aliasing survives a ``w + 0.0`` copy via CSE.  Broadcast lowers cleanly
+    under any sharding and is the same single HBM pass."""
+    lead = jnp.moveaxis(w, dim, 0)
+    dup = jnp.broadcast_to(lead[None], (2,) + lead.shape)
+    dup = dup.reshape((2 * lead.shape[0],) + lead.shape[1:])
+    dup = jnp.moveaxis(dup, 0, dim)
     if w0 == 1.0:
         return dup
     return (w0 * dup.astype(jnp.float32)).astype(w.dtype)
@@ -257,27 +266,33 @@ def interpolate(params_large, params_decoalesced, alpha: float,
 
 def make_coalesce_fn(specs, cfg: ModelConfig, ml: MultiLevelConfig,
                      *, width: bool = True, depth: bool = True,
-                     fused: bool = True):
+                     fused: bool = True, out_shardings=None):
     """jit'd level-transition.  "stack"-variant width axes route through the
     matrix-free fused kernels (repro.kernels.dispatch); everything else runs
     as sharded einsums.  ``fused=False`` forces the dense-matrix path (the
-    equivalence oracle for tests/benchmarks)."""
+    equivalence oracle for tests/benchmarks).  ``out_shardings`` (a
+    NamedSharding tree for the TARGET level's params) makes the projection
+    sharded-in, sharded-out under a mesh -- no host round trip, no gather."""
     maps = build_level_maps(cfg, ml, width=width, depth=depth).as_jnp()
     backend = cfg.kernel_backend or None
     return jax.jit(lambda p: _project_tree(p, specs, maps, "coalesce",
                                            cfg.coalesce_experts,
-                                           backend=backend, fused=fused))
+                                           backend=backend, fused=fused),
+                   out_shardings=out_shardings)
 
 
 def make_decoalesce_fn(specs, cfg: ModelConfig, ml: MultiLevelConfig,
                        *, width: bool = True, depth: bool = True,
-                       fused: bool = True):
+                       fused: bool = True, out_shardings=None):
     maps = build_level_maps(cfg, ml, width=width, depth=depth).as_jnp()
     backend = cfg.kernel_backend or None
     return jax.jit(lambda p: _project_tree(p, specs, maps, "decoalesce",
                                            cfg.coalesce_experts,
-                                           backend=backend, fused=fused))
+                                           backend=backend, fused=fused),
+                   out_shardings=out_shardings)
 
 
-def make_interpolate_fn(alpha: float, backend: Optional[str] = None):
-    return jax.jit(lambda a, b: interpolate(a, b, alpha, backend=backend))
+def make_interpolate_fn(alpha: float, backend: Optional[str] = None,
+                        out_shardings=None):
+    return jax.jit(lambda a, b: interpolate(a, b, alpha, backend=backend),
+                   out_shardings=out_shardings)

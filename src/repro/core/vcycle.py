@@ -27,10 +27,15 @@ The runner is an explicit state machine, not a straight-line script:
 * :class:`VCycleRunner` owns the per-level compiled-step cache: each level's
   train step is ``jax.jit``-compiled at most once per run even though every
   level below the top is visited twice (down + up sweep); ``n_compiles``
-  exposes the count for tests.
+  exposes the count for tests.  Built with a ``mesh``, the runner shards the
+  whole cycle: per-level explicit ``in_shardings``/``out_shardings`` train
+  steps and sharded-in/sharded-out level transitions (the launcher's
+  ``--mesh`` flag feeds this; checkpoints stay mesh-agnostic, so restores
+  may re-shard).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -104,7 +109,7 @@ def saving_vs_baseline(base: History, ours: History, window: int = 5) -> Dict[st
 def _train_loop(step_fn, batch_fn, steps: int, start_in_seg: int, params,
                 opt_state, history: History, cum: float, g: int, level: int,
                 fps: float, log_every: int, target_loss: Optional[float],
-                on_step=None):
+                on_step=None, sync_every_step: bool = False):
     """The one segment inner loop (shared by ``train_segment`` and
     ``VCycleRunner``, so log cadence, FLOPs accounting and the smoothed
     target-loss early stop cannot drift apart between the baselines and the
@@ -113,15 +118,35 @@ def _train_loop(step_fn, batch_fn, steps: int, start_in_seg: int, params,
     ``g`` is the global step (keys the deterministic ``batch_fn``); ``i``
     indexes within the segment (keys the log cadence), starting at
     ``start_in_seg`` when resuming.  ``on_step(i, params, opt_state, cum, g,
-    stop)`` fires after each step's bookkeeping -- the runner hangs state
-    mirroring and checkpoint hooks there (``stop`` is the target-loss early
-    exit, which a checkpoint must not capture: the stop decision is not part
-    of the persisted state, so resuming from the stopping step would train
-    past it).
+    stop, dt)`` fires after each step's bookkeeping with the step's measured
+    wall time -- the runner hangs state mirroring, checkpoint hooks and the
+    watchdog heartbeat there (``stop`` is the target-loss early exit, which a
+    checkpoint must not capture: the stop decision is not part of the
+    persisted state, so resuming from the stopping step would train past it).
+    ``sync_every_step`` blocks on the loss each step so dt is an honest step
+    time (same rationale as ``train_plain``: a straggler on a non-log step
+    must be seen, and dt must not absorb checkpoint snapshots) -- callers
+    without a dt consumer leave it off and keep async-dispatch pipelining.
+
+    The target-loss window covers the CURRENT segment's entries only -- the
+    global history mixes in the previous (smaller) level's losses, and
+    smoothing across a level boundary can fire a spurious early exit.
+    Segment membership is recovered from ``history.step`` (entries newer than
+    the segment's starting global step), so a mid-segment resume sees the
+    same window as an uninterrupted run.  The original >=5-total-entries
+    noise gate is kept, so a fresh run still never stops on its first noisy
+    losses; within a V-cycle the window right after a level boundary may
+    hold fewer than 5 in-segment samples, and firing on the available mean
+    is the pre-existing pinned behavior (tests/test_resume.py).
     """
+    seg_base = bisect.bisect_right(history.step, g - start_in_seg)
     for i in range(start_in_seg, steps):
         batch = batch_fn(g)
+        t0 = time.time()
         params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if sync_every_step:
+            jax.block_until_ready(metrics["loss"])
+        dt = time.time() - t0
         cum += fps
         g += 1
         stop = False
@@ -129,11 +154,12 @@ def _train_loop(step_fn, batch_fn, steps: int, start_in_seg: int, params,
             loss = float(metrics["loss"])
             history.log(cum, loss, g, level)
             if target_loss is not None and len(history.loss) >= 5:
-                _, sm = history.smoothed(5)
-                if len(sm) and sm[-1] <= target_loss:
+                seg_loss = np.asarray(history.loss[seg_base:])
+                w = min(5, len(seg_loss))
+                if w and float(seg_loss[-w:].mean()) <= target_loss:
                     stop = True
         if on_step is not None:
-            on_step(i, params, opt_state, cum, g, stop)
+            on_step(i, params, opt_state, cum, g, stop, dt)
         if stop:
             break
     return params, opt_state, cum, g
@@ -252,15 +278,29 @@ class VCycleRunner:
     even though levels below the top are visited twice (down + up sweep).
     ``run`` may be entered fresh or from a restored :class:`VCycleState`; a
     ``ckpt_cb(state, params, opt_state)`` hook fires every ``ckpt_every``
-    global steps (the launcher plugs ``repro.checkpoint`` in there).
+    global steps (the launcher plugs ``repro.checkpoint`` in there), and an
+    ``on_step(state, params, opt_state, stopping, dt)`` hook fires on EVERY
+    step with the measured step time (the launcher hangs its watchdog
+    heartbeat and SIGTERM preemption check there).
+
+    With ``mesh`` set, the runner is mesh-parallel end to end: each level's
+    train step jits with explicit ``in_shardings``/``out_shardings`` (params
+    and optimizer from the level's Spec tree via the logical-axis rules, the
+    batch data-sharded over the data axes) plus donation, and the level
+    transitions (coalesce / de-coalesce+interpolate) run sharded-in,
+    sharded-out onto the TARGET level's layout.  Because checkpoints store
+    logical (unsharded) arrays, a state saved under one mesh restores onto a
+    runner built with another (see ``launch/train.py``).
     """
 
     def __init__(self, cfg: ModelConfig, ml: MultiLevelConfig, tc: TrainConfig,
                  batch_fn: Callable[[int], Dict[str, jax.Array]], *,
                  seed: int = 0, target_loss: Optional[float] = None,
-                 final_steps: Optional[int] = None, verbose: bool = False):
+                 final_steps: Optional[int] = None, verbose: bool = False,
+                 mesh=None):
         self.ml, self.tc, self.batch_fn = ml, tc, batch_fn
         self.seed, self.target_loss, self.verbose = seed, target_loss, verbose
+        self.mesh = mesh
         self.cfgs = [cfg]
         for _ in range(ml.n_levels - 1):
             self.cfgs.append(ops.coalesce_config(self.cfgs[-1], ml))
@@ -269,44 +309,97 @@ class VCycleRunner:
         self.plan = segments(cfg, ml, tc, final_steps=final_steps)
         self.state: Optional[VCycleState] = None
         self._step_fns: Dict[int, Callable] = {}
+        self._shardings: Dict[int, Tuple[Any, Any]] = {}
+        self._batch_sh = None
         self.n_compiles = 0  # probe: must end up == #levels visited
+
+    def level_shardings(self, level: int) -> Tuple[Any, Any]:
+        """(param, opt) NamedSharding trees for ``level``; (None, None) when
+        the runner has no mesh.  Cached: layouts are pure functions of the
+        level's Spec tree and the mesh."""
+        if self.mesh is None:
+            return None, None
+        got = self._shardings.get(level)
+        if got is None:
+            from repro.models.api import train_state_shardings
+
+            got = train_state_shardings(self.models[level], self.tc, self.mesh)
+            self._shardings[level] = got
+        return got
+
+    def batch_shardings(self):
+        """Data-parallel shardings for ``batch_fn``'s pytree (None w/o mesh)."""
+        if self.mesh is None:
+            return None
+        if self._batch_sh is None:
+            from repro.distributed import batch_shardings
+
+            like = jax.eval_shape(self.batch_fn, 0)
+            self._batch_sh = batch_shardings(like, self.mesh)
+        return self._batch_sh
 
     def step_fn(self, level: int) -> Callable:
         """The compiled train step for ``level`` (built once, then cached)."""
         fn = self._step_fns.get(level)
         if fn is None:
-            fn = jax.jit(make_train_step(self.models[level], self.tc),
-                         donate_argnums=(0, 1))
+            step = make_train_step(self.models[level], self.tc)
+            if self.mesh is None:
+                fn = jax.jit(step, donate_argnums=(0, 1))
+            else:
+                psh, osh = self.level_shardings(level)
+                fn = jax.jit(step,
+                             in_shardings=(psh, osh, self.batch_shardings()),
+                             out_shardings=(psh, osh, None),
+                             donate_argnums=(0, 1))
             self._step_fns[level] = fn
             self.n_compiles += 1
         return fn
 
     def init_state(self) -> Tuple[VCycleState, Any]:
         """Fresh (state, params) for an uninterrupted run."""
-        return VCycleState(), self.models[0].init(jax.random.PRNGKey(self.seed))
+        params = self.models[0].init(jax.random.PRNGKey(self.seed))
+        psh, _ = self.level_shardings(0)
+        if psh is not None:
+            params = jax.device_put(params, psh)
+        return VCycleState(), params
+
+    def _init_opt(self, level: int, params):
+        """Fresh optimizer state for ``level`` (re-init at transitions, paper
+        App. C), laid out on the mesh when there is one."""
+        opt_state = adamw_init(params, self.tc)
+        _, osh = self.level_shardings(level)
+        if osh is not None:
+            opt_state = jax.device_put(opt_state, osh)
+        return opt_state
 
     def _transition(self, state: VCycleState, plan: SegmentPlan, params):
-        """Apply the post-segment operator (Alg. 1 lines 3-4 / 7-9)."""
+        """Apply the post-segment operator (Alg. 1 lines 3-4 / 7-9); with a
+        mesh the projection lands directly on the target level's layout."""
         l = plan.level
         if plan.phase == "down":
             state.params_before[l] = params
             if self.verbose:
                 print(f"[vcycle] level {l} init-trained {plan.steps} steps, coalescing")
-            return ops.make_coalesce_fn(self.specs[l], self.cfgs[l], self.ml)(params)
+            return ops.make_coalesce_fn(
+                self.specs[l], self.cfgs[l], self.ml,
+                out_shardings=self.level_shardings(l + 1)[0])(params)
         if plan.phase == "up":
             if self.verbose:
                 print(f"[vcycle] level {l} trained {plan.steps} steps, de-coalescing")
-            de = ops.make_decoalesce_fn(self.specs[l - 1], self.cfgs[l - 1], self.ml)(params)
+            target_sh = self.level_shardings(l - 1)[0]
+            de = ops.make_decoalesce_fn(self.specs[l - 1], self.cfgs[l - 1],
+                                        self.ml, out_shardings=target_sh)(params)
             # pop, don't read: the stash is consumed here, and dropping it
             # keeps later checkpoints from re-serializing dead full-size trees
             before = state.params_before.pop(l - 1)
             return ops.make_interpolate_fn(
-                self.ml.alpha, backend=self.cfgs[l - 1].kernel_backend or None)(
-                before, de)
+                self.ml.alpha, backend=self.cfgs[l - 1].kernel_backend or None,
+                out_shardings=target_sh)(before, de)
         return params
 
     def run(self, *, state: Optional[VCycleState] = None, params=None,
-            opt_state=None, ckpt_cb=None, ckpt_every: int = 0) -> VCycleOutput:
+            opt_state=None, ckpt_cb=None, ckpt_every: int = 0,
+            on_step=None) -> VCycleOutput:
         """Run (or resume) the V-cycle to completion.
 
         Fresh run: call with no arguments.  Resume: pass the restored
@@ -314,7 +407,10 @@ class VCycleRunner:
         order is keyed on ``state.global_step``, checkpoints always capture
         the in-segment, pre-transition view, and transitions are
         deterministically replayed from it -- so a resumed run is equivalent
-        to an uninterrupted one.
+        to an uninterrupted one.  ``on_step(state, params, opt_state,
+        stopping, dt)`` fires after every step's bookkeeping (after any
+        ``ckpt_cb``) with the step's measured wall time -- it may raise to
+        abort the run.
         """
         if state is None:
             state, params = self.init_state()
@@ -327,12 +423,12 @@ class VCycleRunner:
             state.phase, state.level = plan.phase, plan.level
             fn = self.step_fn(plan.level)
             if opt_state is None:  # re-init at transitions (paper App. C)
-                opt_state = adamw_init(params, tc)
+                opt_state = self._init_opt(plan.level, params)
             fps = flops_lib.train_step_flops(
                 self.cfgs[plan.level], self.specs[plan.level],
                 tc.batch_size, tc.seq_len)
 
-            def on_step(i, p, o, cum, g, stopping):
+            def _on_step(i, p, o, cum, g, stopping, dt):
                 state.cum_flops, state.global_step = cum, g
                 state.seg_step = i + 1
                 # never checkpoint the stopping step: a restart from it would
@@ -340,13 +436,18 @@ class VCycleRunner:
                 if (ckpt_cb is not None and ckpt_every and not stopping
                         and g % ckpt_every == 0):
                     ckpt_cb(state, p, o)
+                if on_step is not None:
+                    on_step(state, p, o, stopping, dt)
 
             params, opt_state, state.cum_flops, state.global_step = _train_loop(
                 fn, self.batch_fn, plan.steps, state.seg_step, params,
                 opt_state, state.history, state.cum_flops, state.global_step,
                 plan.level, fps, tc.log_every,
                 self.target_loss if plan.phase == "final" else None,
-                on_step=on_step)
+                on_step=_on_step,
+                # honest per-step dt only when someone consumes it; library
+                # callers without a hook keep async-dispatch pipelining
+                sync_every_step=on_step is not None)
             params = self._transition(state, plan, params)
             state.seg_index += 1
             state.seg_step = 0

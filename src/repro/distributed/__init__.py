@@ -1,7 +1,9 @@
 from repro.distributed.sharding import (  # noqa: F401
     RULES,
     activation_spec,
+    batch_shardings,
     clear_mesh_ctx,
+    data_shard_index,
     logical_spec,
     mesh_ctx,
     param_shardings,

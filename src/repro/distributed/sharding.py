@@ -15,6 +15,7 @@ import contextlib
 from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import param as pm
@@ -158,8 +159,11 @@ def mesh_ctx(mesh: Mesh, rules: Optional[Dict[str, AxisMap]] = None):
     """Enter mesh: layer-level ``shard_l`` constraints become active."""
     prev = (_CTX["mesh"], _CTX["rules"])
     set_mesh_ctx(mesh, rules)
+    # jax >= 0.5 scopes the mesh with use_mesh; on older jax the Mesh object
+    # itself is the context manager that binds its axis names
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
     try:
-        with jax.sharding.use_mesh(mesh):
+        with (use_mesh(mesh) if use_mesh is not None else mesh):
             yield mesh
     finally:
         _CTX["mesh"], _CTX["rules"] = prev
@@ -190,3 +194,45 @@ def param_shardings(specs, mesh: Mesh, rules=None):
 
 def activation_spec(shape, axes, mesh, rules=None) -> NamedSharding:
     return NamedSharding(mesh, logical_spec(shape, axes, mesh, rules))
+
+
+def batch_shardings(batch_like, mesh: Mesh, rules=None):
+    """Data-parallel NamedSharding tree for a batch pytree.
+
+    Every leaf's leading dim is the logical "batch" axis (sharded over the
+    data-like mesh axes when divisible, replicated otherwise -- same
+    progressive-drop rule as parameters); trailing dims replicate.  Accepts
+    concrete arrays or ShapeDtypeStructs (e.g. ``jax.eval_shape(batch_fn, 0)``).
+    """
+
+    def one(x):
+        axes = ("batch",) + ("seq",) * (len(x.shape) - 1)
+        return NamedSharding(mesh, logical_spec(x.shape, axes, mesh, rules))
+
+    return jax.tree.map(one, batch_like)
+
+
+def data_shard_index(mesh: Optional[Mesh] = None) -> int:
+    """Deterministic data-shard id for THIS process (feeds ``make_batch_fn``).
+
+    Without a mesh this is ``jax.process_index()``.  With a mesh it is the
+    coordinate of the process's first local device along the data-like
+    ("pod", "data") axes, flattened -- model-parallel co-hosts share a shard
+    while data-parallel hosts get distinct ones.  Single-process runs (CPU
+    tests, smoke) always map to shard 0, keeping batches identical across
+    mesh shapes so cross-mesh resume equivalence is well-posed.
+    """
+    if mesh is None:
+        return int(jax.process_index())
+    if jax.process_count() == 1:
+        return 0
+    local = {d.id for d in jax.local_devices()}
+    dev = np.asarray(mesh.devices)
+    data_dims = [i for i, a in enumerate(mesh.axis_names) if a in ("pod", "data")]
+    for idx in np.ndindex(dev.shape):
+        if dev[idx].id in local:
+            shard = 0
+            for i in data_dims:
+                shard = shard * dev.shape[i] + idx[i]
+            return shard
+    return int(jax.process_index())

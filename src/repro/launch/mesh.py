@@ -6,7 +6,68 @@ bootstrap ordering.
 """
 from __future__ import annotations
 
+import os
+from typing import Tuple
+
 import jax
+
+
+def parse_mesh_arg(spec: str) -> Tuple[int, int]:
+    """``"DxM"`` -> (data, model), e.g. ``"2x4"`` -> (2, 4)."""
+    try:
+        d, m = (int(p) for p in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(
+            f"--mesh expects DxM (e.g. 2x4), got {spec!r}") from None
+    if d < 1 or m < 1:
+        raise ValueError(f"--mesh axes must be >= 1, got {spec!r}")
+    return d, m
+
+
+def ensure_host_devices(n: int) -> None:
+    """Force the host (CPU) platform to expose >= ``n`` devices.
+
+    Must run before jax initializes its backends (i.e. before the first
+    device-touching call -- the launcher calls it straight after arg parsing,
+    which is why this module never creates device state at import time).
+    A no-op when enough devices already exist (a real accelerator platform, or
+    XLA_FLAGS already set by the caller); raises when the backend is already
+    live with fewer devices than requested.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    marker = "--xla_force_host_platform_device_count="
+    if n > 1:
+        if marker in flags:
+            # raise an existing, too-small count instead of refusing
+            head, _, rest = flags.partition(marker)
+            val, _, tail = rest.partition(" ")
+            try:
+                have_flag = int(val)
+            except ValueError:
+                have_flag = 0
+            if have_flag < n:
+                os.environ["XLA_FLAGS"] = f"{head}{marker}{n} {tail}".strip()
+        else:
+            os.environ["XLA_FLAGS"] = f"{flags} {marker}{n}".strip()
+    have = jax.device_count()
+    if have < n:
+        raise RuntimeError(
+            f"mesh needs {n} devices but jax sees {have} (backend already "
+            f"initialized?); export "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} before "
+            f"launch")
+
+
+def make_cli_mesh(spec: str):
+    """("data", "model") mesh for the launcher's ``--mesh DxM`` flag.
+
+    CPU-backed for tests/smoke: host devices are forced to d*m before the
+    first backend initialization, so ``--mesh 2x4`` works on a laptop exactly
+    like on a slice (the per-device arrays are just tiny).
+    """
+    d, m = parse_mesh_arg(spec)
+    ensure_host_devices(d * m)
+    return jax.make_mesh((d, m), ("data", "model"))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -1,29 +1,46 @@
 """Production-shaped training driver.
 
 Runs real training (proxy/smoke scale on this CPU container; the same code
-path drives a sharded mesh via ``--mesh``), with:
+path drives a sharded mesh via ``--mesh DxM``), with:
 
 * V-cycle multi-level schedule (``--vcycle``) or plain from-scratch,
+* mesh parallelism: ``--mesh 2x4`` builds a ("data", "model") mesh (host CPU
+  devices are forced when needed, so the flag works on a laptop), enters the
+  sharding-rules context, and jits every train step -- per V-cycle level --
+  with explicit ``in_shardings``/``out_shardings`` derived from the level's
+  Spec tree, donation included; level transitions (coalesce /
+  de-coalesce+interpolate) project sharded-in, sharded-out onto the target
+  level's layout,
 * fault tolerance: atomic async checkpointing every ``--ckpt-every`` steps
   with auto-resume; V-cycle runs save and restore the full mid-cycle state
   (phase, level, step-within-segment, FLOPs history, interpolation stashes),
   so a SIGKILL at any point -- including mid-upward-sweep -- resumes
   equivalently to an uninterrupted run (scripts/smoke_resume.sh drills this),
-* deterministic host-sharded synthetic data (any host can regenerate any
-  shard -> straggler/elastic-safe),
-* a step-time watchdog that flags stragglers (steps slower than
-  ``--straggler-factor`` x the running median are logged).
+* elastic re-shard on restore: checkpoints store logical (unsharded) arrays,
+  so a run saved under ``--mesh 1x2`` resumes under ``--mesh 2x1`` (or no
+  mesh at all) -- including mid-upward-sweep with the ``params_before_*``
+  stashes re-sharded (tests/test_distributed.py pins the equivalence),
+* preemption awareness: SIGTERM triggers ONE final blocking checkpoint at
+  the next step boundary and a clean exit 0, instead of hoping the cadence
+  saved recently (scripts/smoke_resume.sh act 2 drills this),
+* deterministic host-sharded synthetic data keyed on
+  ``repro.distributed.data_shard_index`` (any host can regenerate any
+  shard -> straggler/elastic-safe; data-parallel hosts get distinct shards),
+* a step-time watchdog that flags stragglers (steps slower than ``factor`` x
+  the median of PRIOR step times are logged) on both drivers.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b --smoke \
       --steps 50 --ckpt-dir /tmp/ck
-  PYTHONPATH=src python -m repro.launch.train --arch gpt-proxy --vcycle \
-      --steps 200
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b --smoke \
+      --vcycle --mesh 1x2 --steps 20 --ckpt-dir /tmp/ck
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
+import signal
 import time
 from typing import Any, Dict, Optional
 
@@ -38,8 +55,10 @@ from repro.core import flops as flops_lib
 from repro.core import operators as ops
 from repro.core.vcycle import History, VCycleOutput, VCycleRunner, VCycleState
 from repro.data import MarkovLM, lm_batch, masked_lm_batch, vision_batch
+from repro.distributed import batch_shardings, data_shard_index, mesh_ctx
+from repro.launch.mesh import make_cli_mesh
 from repro.models.api import (build_model, init_train_state, make_train_step,
-                              zero_train_state)
+                              train_state_shardings, zero_train_state)
 from repro.optim import adamw_init
 
 
@@ -78,9 +97,15 @@ class Watchdog:
         self.flagged = 0
 
     def observe(self, dt: float) -> bool:
-        self.times.append(dt)
-        if len(self.times) >= 10:
-            med = float(np.median(self.times[-50:]))
+        # median over PRIOR samples only: appending first let the straggler
+        # dilute its own baseline (a spike entering the window shifts the
+        # median up and can mask itself right at the flagging threshold).
+        # Only the trailing window is ever read, so don't grow unbounded
+        # over multi-day runs.
+        prior = self.times[-50:]
+        self.times = prior + [dt]
+        if len(prior) >= 10:
+            med = float(np.median(prior))
             if dt > self.factor * med:
                 self.flagged += 1
                 print(f"[watchdog] slow step: {dt*1e3:.0f}ms vs median {med*1e3:.0f}ms")
@@ -88,19 +113,62 @@ class Watchdog:
         return False
 
 
+class PreemptionGuard:
+    """SIGTERM-aware preemption notice.
+
+    The handler only sets a flag (async-signal-safe); the training loops poll
+    it once per step and run ONE final *blocking* checkpoint before exiting 0
+    -- preempted pods save at the notice instead of waiting for the
+    ``--ckpt-every`` cadence.
+    """
+
+    def __init__(self):
+        self.triggered = False
+
+    def install(self, signals=(signal.SIGTERM,)) -> "PreemptionGuard":
+        for s in signals:
+            try:
+                signal.signal(s, self._handler)
+            except ValueError:  # not the main thread (e.g. embedded in a test)
+                break
+        return self
+
+    def _handler(self, signum, frame):
+        self.triggered = True
+        print(f"[preempt] caught signal {signum}; will checkpoint and exit at "
+              "the next step boundary", flush=True)
+
+
 def train_plain(cfg, tc: TrainConfig, *, ckpt: Optional[CheckpointManager],
-                ckpt_every: int, verbose: bool = True):
+                ckpt_every: int, verbose: bool = True, mesh=None,
+                preempt: Optional[PreemptionGuard] = None):
     model = build_model(cfg)
-    batch_fn = make_batch_fn(cfg, tc)
+    batch_fn = make_batch_fn(cfg, tc, shard=data_shard_index(mesh))
     params, opt = init_train_state(model, tc, jax.random.PRNGKey(tc.seed))
+    psh = osh = bsh = None
+    if mesh is not None:
+        psh, osh = train_state_shardings(model, tc, mesh)
+        params = jax.device_put(params, psh)
+        opt = jax.device_put(opt, osh)
+        bsh = batch_shardings(jax.eval_shape(batch_fn, 0), mesh)
     start = 0
     if ckpt is not None:
-        restored, meta = ckpt.restore({"params": params, "opt": opt})
+        # elastic restore: the checkpoint holds logical arrays, so target
+        # shardings may describe a different mesh than the one that saved
+        restored, meta = ckpt.restore(
+            {"params": params, "opt": opt},
+            shardings=None if mesh is None else {"params": psh, "opt": osh})
         if restored is not None:
             params, opt = restored["params"], restored["opt"]
             start = int(meta.get("step", 0))
             print(f"[train] resumed from step {start}")
-    step_fn = jax.jit(make_train_step(model, tc), donate_argnums=(0, 1))
+    if mesh is None:
+        step_fn = jax.jit(make_train_step(model, tc), donate_argnums=(0, 1))
+    else:
+        step_fn = jax.jit(make_train_step(model, tc),
+                          in_shardings=(psh, osh, bsh),
+                          out_shardings=(psh, osh, None),
+                          donate_argnums=(0, 1))
     wd = Watchdog()
     for i in range(start, tc.steps):
         t0 = time.time()
@@ -110,6 +178,13 @@ def train_plain(cfg, tc: TrainConfig, *, ckpt: Optional[CheckpointManager],
         # log steps
         jax.block_until_ready(metrics["loss"])
         wd.observe(time.time() - t0)
+        if preempt is not None and preempt.triggered:
+            if ckpt is not None:
+                ckpt.save(i + 1, {"params": params, "opt": opt},
+                          meta={"step": i + 1}, blocking=True)
+                print(f"[preempt] SIGTERM: final checkpoint at step {i + 1}; "
+                      "exiting", flush=True)
+            raise SystemExit(0)
         if i % tc.log_every == 0:
             loss = float(metrics["loss"])
             if verbose:
@@ -142,7 +217,7 @@ def make_vcycle_save_cb(ckpt: CheckpointManager, schedule=None):
     """
     sched = _schedule_meta(schedule) if schedule is not None else None
 
-    def save_cb(state: VCycleState, params, opt_state) -> None:
+    def save_cb(state: VCycleState, params, opt_state, blocking: bool = False) -> None:
         stashed = sorted(state.params_before)
         payload = {"params": params, "opt": opt_state,
                    **{f"params_before_{l}": state.params_before[l] for l in stashed}}
@@ -153,7 +228,7 @@ def make_vcycle_save_cb(ckpt: CheckpointManager, schedule=None):
             "stashed_levels": stashed, "history": state.history.to_dict()}
         if sched is not None:
             meta["schedule"] = sched
-        ckpt.save(state.global_step, payload, meta=meta, blocking=False)
+        ckpt.save(state.global_step, payload, meta=meta, blocking=blocking)
 
     return save_cb
 
@@ -164,7 +239,11 @@ def restore_vcycle_state(ckpt: CheckpointManager, runner: VCycleRunner,
 
     Inverse of :func:`make_vcycle_save_cb`: like-trees come from
     ``zero_train_state`` of the checkpointed level's model, so no RNG or
-    training work happens before the arrays land.  Raises ``ValueError`` if
+    training work happens before the arrays land.  When ``runner`` carries a
+    mesh, every restored tree -- the in-segment params/opt AND each
+    ``params_before_<level>`` stash -- is device_put straight onto that
+    runner's per-level layouts, so a checkpoint written under mesh A resumes
+    under mesh B (elastic mid-V-cycle re-shard).  Raises ``ValueError`` if
     the checkpoint's segment schedule (or position) does not fit ``runner``'s
     -- resuming a checkpoint under different ``--steps``/``--levels`` would
     otherwise silently train the wrong schedule.
@@ -191,7 +270,13 @@ def restore_vcycle_state(ckpt: CheckpointManager, runner: VCycleRunner,
     stashed = [int(l) for l in meta.get("stashed_levels", [])]
     for l in stashed:
         like[f"params_before_{l}"] = zero_train_state(runner.models[l], tc)[0]
-    restored, meta = ckpt.restore(like)
+    shardings = None
+    if runner.mesh is not None:
+        psh, osh = runner.level_shardings(level)
+        shardings = {"params": psh, "opt": osh}
+        for l in stashed:
+            shardings[f"params_before_{l}"] = runner.level_shardings(l)[0]
+    restored, meta = ckpt.restore(like, shardings=shardings)
     state = VCycleState(
         phase=meta["phase"], level=level,
         seg_index=int(meta["seg_index"]), seg_step=int(meta["seg_step"]),
@@ -203,7 +288,8 @@ def restore_vcycle_state(ckpt: CheckpointManager, runner: VCycleRunner,
 
 def train_vcycle_ckpt(cfg, ml: MultiLevelConfig, tc: TrainConfig, *,
                       ckpt: Optional[CheckpointManager], ckpt_every: int,
-                      verbose: bool = True):
+                      verbose: bool = True, mesh=None,
+                      preempt: Optional[PreemptionGuard] = None):
     """V-cycle with real (phase, level, step) checkpoint/resume.
 
     Every ``ckpt_every`` global steps the runner's hook saves
@@ -216,9 +302,17 @@ def train_vcycle_ckpt(cfg, ml: MultiLevelConfig, tc: TrainConfig, *,
     equivalent to an uninterrupted one (tests/test_resume.py asserts
     allclose on final params and History).  A terminal "phase=done"
     checkpoint makes re-invocation after completion a no-op.
+
+    ``mesh`` shards the whole cycle (per-level explicit-sharding train steps
+    and sharded level transitions); because checkpoints store logical arrays,
+    the mesh at restore time may differ from the one that saved.  The
+    runner's per-step hook carries the straggler watchdog heartbeat and, when
+    ``preempt`` has triggered (SIGTERM), one final BLOCKING checkpoint
+    followed by a clean exit 0.
     """
-    batch_fn = make_batch_fn(cfg, tc)
-    runner = VCycleRunner(cfg, ml, tc, batch_fn, seed=tc.seed, verbose=verbose)
+    batch_fn = make_batch_fn(cfg, tc, shard=data_shard_index(mesh))
+    runner = VCycleRunner(cfg, ml, tc, batch_fn, seed=tc.seed, verbose=verbose,
+                          mesh=mesh)
     state = params = opt = None
     if ckpt is not None:
         m = ckpt.latest()
@@ -226,7 +320,10 @@ def train_vcycle_ckpt(cfg, ml: MultiLevelConfig, tc: TrainConfig, *,
         if "phase" in meta:
             if meta["phase"] == "done":
                 like_p, _ = zero_train_state(runner.models[0], tc)
-                restored, _ = ckpt.restore({"params": like_p})
+                restored, _ = ckpt.restore(
+                    {"params": like_p},
+                    shardings=(None if mesh is None
+                               else {"params": runner.level_shardings(0)[0]}))
                 print("[vcycle] checkpoint already complete; returning saved params")
                 return VCycleOutput(
                     params=restored["params"],
@@ -237,10 +334,30 @@ def train_vcycle_ckpt(cfg, ml: MultiLevelConfig, tc: TrainConfig, *,
             state, params, opt = restore_vcycle_state(ckpt, runner, tc)
             print(f"[vcycle] resumed at phase={state.phase} level={state.level} "
                   f"seg_step={state.seg_step} global_step={state.global_step}")
+    save_cb = (make_vcycle_save_cb(ckpt, schedule=runner.plan)
+               if ckpt is not None else None)
+    # one watchdog PER LEVEL: a half-width level's steps are ~8x cheaper, so a
+    # shared median would flag every full-size step of the upward sweep
+    wds: Dict[int, Watchdog] = {}
+
+    def on_step(st: VCycleState, p, o, stopping: bool, dt: float) -> None:
+        # dt is the runner-measured, device-blocked step time, so checkpoint
+        # snapshots and level transitions never read as stragglers; each
+        # segment's first step is skipped too -- it may carry the level's
+        # one-time jit compile inside the timed step call
+        if st.seg_step > 1:
+            wds.setdefault(st.level, Watchdog()).observe(dt)
+        # a stopping step is never persisted (see VCycleRunner.run), so a
+        # preemption on it just lets the normal completion path finish
+        if preempt is not None and preempt.triggered and not stopping:
+            if save_cb is not None:
+                save_cb(st, p, o, blocking=True)
+                print(f"[preempt] SIGTERM: blocking V-cycle checkpoint at "
+                      f"global_step {st.global_step}; exiting", flush=True)
+            raise SystemExit(0)
+
     out = runner.run(state=state, params=params, opt_state=opt,
-                     ckpt_cb=(make_vcycle_save_cb(ckpt, schedule=runner.plan)
-                              if ckpt is not None else None),
-                     ckpt_every=ckpt_every)
+                     ckpt_cb=save_cb, ckpt_every=ckpt_every, on_step=on_step)
     if ckpt is not None:
         gs = runner.state.global_step
         ckpt.save(gs, {"params": out.params},
@@ -262,10 +379,20 @@ def main() -> None:
     ap.add_argument("--vcycle", action="store_true")
     ap.add_argument("--levels", type=int, default=2)
     ap.add_argument("--alpha", type=float, default=0.25)
+    ap.add_argument("--mesh", default="",
+                    help="DxM ('data','model') mesh, e.g. 2x4; host CPU devices "
+                         "are forced when the platform has fewer (smoke/tests)")
+    ap.add_argument("--f32", action="store_true",
+                    help="force float32 compute (tight cross-mesh resume "
+                         "equivalence; default keeps the config's dtype)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    # the mesh must exist before ANY device-touching jax call: on CPU it may
+    # need to force host device count, which only works pre-backend-init
+    mesh = make_cli_mesh(args.mesh) if args.mesh else None
 
     try:
         cfg = get_config(args.arch, smoke=args.smoke)
@@ -274,15 +401,21 @@ def main() -> None:
 
         cfg = {"gpt-proxy": paper_models.gpt_proxy(), "bert-proxy": paper_models.bert_proxy(),
                "deit-proxy": paper_models.deit_proxy()}[args.arch]
+    if args.f32:
+        cfg = cfg.replace(compute_dtype=jnp.float32)
     tc = TrainConfig(steps=args.steps, warmup_steps=max(args.steps // 20, 1),
                      peak_lr=args.lr, batch_size=args.batch, seq_len=args.seq,
                      seed=args.seed)
     ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-    if args.vcycle:
-        ml = MultiLevelConfig(n_levels=args.levels, alpha=args.alpha)
-        train_vcycle_ckpt(cfg, ml, tc, ckpt=ckpt, ckpt_every=args.ckpt_every)
-    else:
-        train_plain(cfg, tc, ckpt=ckpt, ckpt_every=args.ckpt_every)
+    preempt = PreemptionGuard().install() if ckpt is not None else None
+    with (mesh_ctx(mesh) if mesh is not None else contextlib.nullcontext()):
+        if args.vcycle:
+            ml = MultiLevelConfig(n_levels=args.levels, alpha=args.alpha)
+            train_vcycle_ckpt(cfg, ml, tc, ckpt=ckpt, ckpt_every=args.ckpt_every,
+                              mesh=mesh, preempt=preempt)
+        else:
+            train_plain(cfg, tc, ckpt=ckpt, ckpt_every=args.ckpt_every,
+                        mesh=mesh, preempt=preempt)
 
 
 if __name__ == "__main__":

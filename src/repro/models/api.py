@@ -190,6 +190,20 @@ def train_state_specs(model: Model, tc: TrainConfig):
     return ps, adamw_init_specs(ps, tc)
 
 
+def train_state_shardings(model: Model, tc: TrainConfig, mesh, rules=None):
+    """(param, opt) NamedSharding trees for a model's train state on ``mesh``.
+
+    Derived from the Spec trees (the optimizer mirrors the parameter logical
+    axes), so every V-cycle level gets its own layout and a checkpoint written
+    under one mesh can be restored onto another by passing these to
+    ``CheckpointManager.restore(shardings=...)``.
+    """
+    from repro.distributed import param_shardings
+
+    ps, opt_specs = train_state_specs(model, tc)
+    return param_shardings(ps, mesh, rules), param_shardings(opt_specs, mesh, rules)
+
+
 def zero_train_state(model: Model, tc: TrainConfig):
     """Zero-filled (params, opt_state) with the exact structure/shape/dtype of
     ``init_train_state`` -- cheap "like" trees for checkpoint restore (no RNG,

@@ -21,6 +21,22 @@ def test_shards_differ_but_are_reproducible():
     np.testing.assert_array_equal(np.asarray(b["tokens"]), np.asarray(b_again["tokens"]))
 
 
+def test_make_batch_fn_wires_shard():
+    """Launcher-level: make_batch_fn(shard=...) must thread the shard into the
+    generator -- callers used to hardcode shard 0, giving every data-parallel
+    host an identical batch stream."""
+    from helpers import fast_tc, tiny_dense
+    from repro.launch.train import make_batch_fn
+
+    cfg, tc = tiny_dense(), fast_tc()
+    b0 = make_batch_fn(cfg, tc, shard=0)(0)
+    b1 = make_batch_fn(cfg, tc, shard=1)(0)
+    b0_again = make_batch_fn(cfg, tc, shard=0)(0)
+    assert not np.array_equal(np.asarray(b0["tokens"]), np.asarray(b1["tokens"]))
+    np.testing.assert_array_equal(np.asarray(b0["tokens"]),
+                                  np.asarray(b0_again["tokens"]))
+
+
 def test_labels_are_next_tokens():
     c = MarkovLM(64)
     b = lm_batch(c, 0, 0, 2, 8)

@@ -81,6 +81,44 @@ def test_kill_and_resume_equivalence(tmp_path):
     assert runner2.n_compiles == 2
 
 
+def test_restore_unsharded_save_onto_mesh(tmp_path):
+    """Elastic re-shard, in-process flavor: a checkpoint written by an
+    UNSHARDED run restores onto a mesh-carrying runner (1x1 fits the test
+    process's single CPU device) -- params, opt and the mid-upward-sweep
+    ``params_before_*`` stash all land as NamedSharding arrays, and the
+    resumed sharded run matches the uninterrupted unsharded reference.
+    (The multi-device 1x1 <-> 2x2 version lives in test_distributed.py.)"""
+    from jax.sharding import NamedSharding
+
+    cfg, ml, tc, bf = arena()
+    ref = VCycleRunner(cfg, ml, tc, bf, seed=0).run()
+
+    cm = CheckpointManager(str(tmp_path))
+    runner = VCycleRunner(cfg, ml, tc, bf, seed=0)
+    save_cb = make_vcycle_save_cb(cm, schedule=runner.plan)
+
+    def killing_cb(state, params, opt_state):
+        save_cb(state, params, opt_state)
+        if state.global_step == 6:
+            raise Preempted
+
+    with pytest.raises(Preempted):
+        runner.run(ckpt_cb=killing_cb, ckpt_every=2)
+    cm.wait()
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    runner2 = VCycleRunner(cfg, ml, tc, bf, seed=0, mesh=mesh)
+    state, params, opt = restore_vcycle_state(cm, runner2, tc)
+    for tree in (params, opt, state.params_before[0]):
+        for leaf in jax.tree.leaves(tree):
+            assert isinstance(leaf.sharding, NamedSharding)
+    out = runner2.run(state=state, params=params, opt_state=opt)
+    for a, b in zip(jax.tree.leaves(out.params), jax.tree.leaves(ref.params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+    assert out.history.step == ref.history.step
+
+
 def test_resume_rejects_schedule_mismatch(tmp_path):
     """Restarting under different --steps/--levels must fail loudly, not
     silently train the wrong schedule from the restored (seg_index, seg_step)."""

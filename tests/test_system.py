@@ -128,6 +128,43 @@ def test_watchdog_observes_slow_step():
     assert wd.flagged == 1
 
 
+def test_watchdog_median_excludes_current_sample():
+    """Regression: the baseline median must be computed over PRIOR samples
+    only.  With a bimodal window (25x10ms + 25x50ms, prior median 30ms) a
+    100ms spike is > 3x the baseline -- but appending it first shifted the
+    window median to 50ms, and the straggler masked itself."""
+    from repro.launch.train import Watchdog
+
+    wd = Watchdog(factor=3.0)
+    for _ in range(25):
+        wd.observe(0.01)
+    for _ in range(25):
+        wd.observe(0.05)
+    assert wd.observe(0.1) is True
+
+
+def test_vcycle_driver_heartbeats_every_step():
+    """The module docstring promises the straggler watchdog on BOTH drivers;
+    the V-cycle driver hangs it on the runner's per-step hook.  Every step is
+    observed except each segment's first (its dt may carry the level's
+    one-time jit compile, which is not a straggler signal)."""
+    import repro.launch.train as T
+    from repro.core.vcycle import segments
+
+    seen = []
+    orig = T.Watchdog.observe
+    T.Watchdog.observe = lambda self, dt: (seen.append(dt), orig(self, dt))[1]
+    try:
+        cfg = tiny_dense(d_model=32, d_ff=64, vocab_size=128)
+        tc = fast_tc(steps=6, log_every=10)
+        ml = MultiLevelConfig(n_levels=2)
+        T.train_vcycle_ckpt(cfg, ml, tc, ckpt=None, ckpt_every=0, verbose=False)
+    finally:
+        T.Watchdog.observe = orig
+    plan = segments(cfg, ml, tc)
+    assert len(seen) == sum(p.steps for p in plan) - len(plan)
+
+
 def test_train_plain_heartbeats_every_step(monkeypatch):
     """Regression: with log_every > 1 the watchdog used to see only every
     log_every-th step, hiding most stragglers."""
@@ -145,6 +182,104 @@ def test_train_plain_heartbeats_every_step(monkeypatch):
     tc = fast_tc(steps=5, log_every=10)
     T.train_plain(cfg, tc, ckpt=None, ckpt_every=0, verbose=False)
     assert len(seen) == 5
+
+
+@pytest.mark.slow
+def test_vcycle_launcher_sigterm_checkpoints(tmp_path):
+    """Preemption awareness: SIGTERM must trigger ONE final blocking
+    checkpoint and a clean exit 0, even though the --ckpt-every cadence
+    (1000) would never fire; the restart resumes from that save."""
+    env = dict(os.environ, PYTHONPATH="src")
+    root = os.path.join(os.path.dirname(__file__), "..")
+    args = [sys.executable, "-m", "repro.launch.train", "--arch", "tinyllama-1.1b",
+            "--smoke", "--vcycle", "--levels", "2", "--steps", "40",
+            "--batch", "2", "--seq", "16",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "1000"]
+    log = os.path.join(str(tmp_path), "run.log")
+    with open(log, "w") as lf:
+        p = subprocess.Popen(args, env=env, cwd=root, stdout=lf,
+                             stderr=subprocess.STDOUT)
+        deadline = time.time() + 240
+        stepping = False
+        while time.time() < deadline and p.poll() is None and not stepping:
+            with open(log) as f:
+                stepping = "coalescing" in f.read()  # past the first segment
+            time.sleep(0.05)
+        assert stepping, "run never reached the first transition"
+        p.send_signal(signal.SIGTERM)
+        assert p.wait(timeout=240) == 0, "SIGTERM exit was not clean"
+    out = open(log).read()
+    assert "[preempt] SIGTERM: blocking V-cycle checkpoint" in out, out[-1500:]
+    manifest = os.path.join(str(tmp_path), "manifest.json")
+    assert os.path.exists(manifest), "preemption save never published"
+    r = subprocess.run(args, capture_output=True, text=True, env=env, cwd=root,
+                       timeout=300)
+    assert r.returncode == 0, r.stderr[-1500:]
+    assert "resumed at phase=" in r.stdout, r.stdout[-1500:]
+
+
+def _load_final_params(ckpt_dir: str):
+    import json
+
+    m = json.load(open(os.path.join(ckpt_dir, "manifest.json")))
+    assert m["meta"].get("phase") == "done", m["meta"]
+    pdir = os.path.join(ckpt_dir, m["dir"], "params")
+    return {fn: np.load(os.path.join(pdir, fn))
+            for fn in sorted(os.listdir(pdir)) if fn.endswith(".npy")}
+
+
+@pytest.mark.slow
+def test_vcycle_launcher_mesh_kill_resume_cross_mesh(tmp_path):
+    """The acceptance drill: a --mesh 1x2 V-cycle run SIGKILLed
+    mid-upward-sweep resumes under --mesh 2x1 and reproduces the
+    uninterrupted run's final params (the launcher forces CPU host devices
+    itself, so no XLA_FLAGS in the parent)."""
+    import json
+
+    env = dict(os.environ, PYTHONPATH="src")
+    root = os.path.join(os.path.dirname(__file__), "..")
+    common = [sys.executable, "-m", "repro.launch.train", "--arch",
+              "tinyllama-1.1b", "--smoke", "--vcycle", "--levels", "2",
+              "--steps", "20", "--batch", "4", "--seq", "16", "--f32",
+              "--ckpt-every", "2"]
+    ref_dir, ck_dir = str(tmp_path / "ref"), str(tmp_path / "ck")
+
+    r = subprocess.run(common + ["--mesh", "1x2", "--ckpt-dir", ref_dir],
+                       capture_output=True, text=True, env=env, cwd=root,
+                       timeout=480)
+    assert r.returncode == 0, r.stderr[-1500:]
+
+    p = subprocess.Popen(common + ["--mesh", "1x2", "--ckpt-dir", ck_dir],
+                         env=env, cwd=root, stdout=subprocess.DEVNULL,
+                         stderr=subprocess.DEVNULL)
+    manifest = os.path.join(ck_dir, "manifest.json")
+    deadline = time.time() + 240
+    phase = None
+    try:
+        while time.time() < deadline and p.poll() is None and phase != "up":
+            try:
+                phase = json.load(open(manifest))["meta"].get("phase")
+            except (OSError, ValueError):
+                pass
+            time.sleep(0.02)
+        assert phase == "up", f"never saw an upward-sweep checkpoint ({phase})"
+    finally:
+        if p.poll() is None:
+            os.kill(p.pid, signal.SIGKILL)
+        p.wait(timeout=60)
+
+    r2 = subprocess.run(common + ["--mesh", "2x1", "--ckpt-dir", ck_dir],
+                        capture_output=True, text=True, env=env, cwd=root,
+                        timeout=480)
+    assert r2.returncode == 0, r2.stderr[-1500:]
+    assert "resumed at phase=up" in r2.stdout, r2.stdout[-1500:]
+
+    ref, got = _load_final_params(ref_dir), _load_final_params(ck_dir)
+    assert ref.keys() == got.keys()
+    for k in ref:
+        np.testing.assert_allclose(got[k].astype(np.float64),
+                                   ref[k].astype(np.float64), atol=1e-3,
+                                   err_msg=k)
 
 
 @pytest.mark.slow

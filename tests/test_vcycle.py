@@ -45,6 +45,55 @@ def test_three_level_vcycle(setup):
     assert np.isfinite(out.history.loss[-1])
 
 
+def test_target_loss_window_is_segment_local(setup):
+    """Regression: the target-loss early stop must smooth over the CURRENT
+    segment's entries only.  Stale losses logged by the previous (smaller)
+    level used to leak into the 5-wide window at the level boundary and could
+    fire a spurious exit on the final segment's first log step."""
+    from repro.core.vcycle import train_segment
+    from repro.models.api import build_model
+
+    cfg, _, bf = setup
+    model = build_model(cfg)
+    hist = History()
+    for k in range(5):  # previous level's trace: absurdly low losses
+        hist.log(float(k), -100.0, k, 1)
+    tc2 = fast_tc(steps=6, batch_size=4, seq_len=16, log_every=1, peak_lr=3e-3)
+    # real losses are positive, so target 0.0 is unreachable this segment --
+    # only the poisoned history could trip the stop
+    _, _, hist, _, g = train_segment(model, tc2, bf, tc2.steps, history=hist,
+                                     start_step=5, target_loss=0.0)
+    assert g == 5 + tc2.steps, "early stop fired from the previous level's losses"
+    assert len(hist.loss) == 5 + tc2.steps
+
+
+def test_target_loss_window_survives_resume(setup):
+    """The segment-local window must be recovered from history.step, not from
+    the loop entry point: a mid-segment resume has this segment's pre-crash
+    entries already in the history, and excluding them would make the early
+    stop diverge from an uninterrupted run."""
+    import jax
+
+    from repro.core.vcycle import _train_loop
+    from repro.models.api import build_model, init_train_state, make_train_step
+    from repro.optim import adamw_init
+
+    cfg, _, bf = setup
+    model = build_model(cfg)
+    tc2 = fast_tc(steps=6, batch_size=4, seq_len=16, log_every=1, peak_lr=3e-3)
+    params, opt = init_train_state(model, tc2, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(model, tc2))
+    hist = History()
+    hist.log(0.0, -100.0, 3, 1)  # previous segment (g <= 5): excluded
+    for k in range(3):           # this segment's pre-crash entries (g=6..8)
+        hist.log(float(k), -100.0, 6 + k, 0)
+    # resume at seg_step=3 (segment started at g=5); after one more step the
+    # window [-100,-100,-100,loss] stays <= 0 -> must stop immediately
+    _, _, _, g = _train_loop(step_fn, bf, tc2.steps, 3, params, opt, hist,
+                             0.0, 8, 0, 1.0, tc2.log_every, target_loss=0.0)
+    assert g == 9, "resume dropped this segment's pre-crash window entries"
+
+
 def test_savings_metric(setup):
     cfg, tc, bf = setup
     _, base = run_scratch(cfg, tc, bf, seed=0)
