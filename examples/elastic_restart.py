@@ -1,19 +1,29 @@
-"""Fault-tolerance demo, two acts:
+"""Fault-tolerance demo, three acts:
 
 1. plain training: checkpoint, simulate preemption, resume on a DIFFERENT
    mesh layout (elastic re-shard on restore);
 2. V-cycle training: SIGKILL-style preemption in the middle of the upward
    sweep, then auto-resume at the exact (phase, level, step) -- the pending
    de-coalesce/interpolate transition replays deterministically, with the
-   resumed run re-sharded onto a mesh (elastic mid-V-cycle re-shard).
+   resumed run re-sharded onto a mesh (elastic mid-V-cycle re-shard);
+3. multi-process: a real 2-process `jax.distributed` V-cycle run (localhost
+   coordinator, ("data","model") mesh spanning both processes, coordinated
+   per-process checkpoint shards), preempted by a SIGTERM to ONE process --
+   the drain flag all-reduces so both save the same step and exit 0 -- then
+   resumed by a SINGLE process (checkpoints are process-count-elastic).
 
 For the real CLI versions: `--mesh DxM` + SIGKILL/SIGTERM drills live in
-scripts/smoke_resume.sh and tests/test_system.py.
+scripts/smoke_resume.sh and tests/test_system.py / test_multiprocess.py.
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
 import os
 import shutil
+import signal
+import socket
+import subprocess
+import sys
+import time
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +39,7 @@ from repro.models.api import build_model, init_train_state, make_train_step
 
 CKPT = "/tmp/elastic_demo_ckpt"
 CKPT_VCYCLE = "/tmp/elastic_demo_vcycle_ckpt"
+CKPT_MP = "/tmp/elastic_demo_mp_ckpt"
 
 
 class Preempted(RuntimeError):
@@ -107,6 +118,61 @@ def main_vcycle():
           f"total FLOPs {out.total_flops:.3e}")
 
 
+def main_multiprocess():
+    shutil.rmtree(CKPT_MP, ignore_errors=True)
+    print("== phase 1: 2-process V-cycle (localhost coordinator), SIGTERM "
+          "delivered to process 1 only ==")
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    args = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "tinyllama-1.1b", "--smoke", "--vcycle", "--levels", "2",
+            "--steps", "40", "--batch", "4", "--seq", "16", "--f32",
+            "--ckpt-dir", CKPT_MP, "--ckpt-every", "1000"]
+    mp = ["--mesh", "2x1", "--coordinator", f"127.0.0.1:{port}",
+          "--num-processes", "2"]
+    env = dict(os.environ, PYTHONPATH="src")
+    logs = [f"{CKPT_MP}.rank{i}.log" for i in (0, 1)]
+    os.makedirs(CKPT_MP, exist_ok=True)
+    procs = []
+    for i in (0, 1):
+        with open(logs[i], "w") as lf:
+            procs.append(subprocess.Popen(
+                args + mp + ["--process-id", str(i)], env=env, stdout=lf,
+                stderr=subprocess.STDOUT))
+    # wait until training is demonstrably stepping (past the first segment),
+    # so the SIGTERM lands mid-cycle with the preemption handler installed
+    try:
+        deadline = time.time() + 240
+        while time.time() < deadline and all(p.poll() is None for p in procs):
+            if "coalescing" in open(logs[0]).read():
+                break
+            time.sleep(0.2)
+        procs[1].send_signal(signal.SIGTERM)  # ONE process gets the notice...
+        for p in procs:
+            p.wait(timeout=240)
+    finally:
+        for p in procs:  # a wedged drain must not leave orphans training
+            if p.poll() is None:
+                p.kill()
+                p.wait()
+    # ...and the all-reduced drain flag makes BOTH save the same step + exit 0
+    for i, p in enumerate(procs):
+        out = open(logs[i]).read()
+        drain = [l for l in out.splitlines() if "[preempt]" in l]
+        print(f"process {i}: exit {p.returncode}; " +
+              (drain[-1] if drain else "(no drain line)"))
+
+    print("== phase 2: the 2-process checkpoint resumes under ONE process ==")
+    out = subprocess.run(args, env=env, capture_output=True, text=True,
+                         timeout=480).stdout
+    for l in out.splitlines():
+        if "resumed at phase=" in l or "total training FLOPs" in l:
+            print(l)
+
+
 if __name__ == "__main__":
     main()
     main_vcycle()
+    main_multiprocess()

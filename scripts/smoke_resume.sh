@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# End-to-end preemption drills for the launcher, two acts:
+# End-to-end preemption drills for the launcher, three acts:
 #
 # Act 1 -- SIGKILL (no notice):
 #   1. start a real `python -m repro.launch.train --vcycle` run,
@@ -13,10 +13,19 @@
 #   3. require exit 0, the "[preempt]" final BLOCKING checkpoint, and a
 #      restart that resumes from exactly that save.
 #
+# Act 3 -- multi-process SIGTERM drain (cross-host preemption):
+#   1. start a 2-process jax.distributed V-cycle run (localhost coordinator,
+#      --mesh 2x1 spanning both processes, coordinated sharded checkpoints),
+#   2. SIGTERM process 1 ONLY,
+#   3. require BOTH processes to exit 0 with a "[preempt]" drain save at the
+#      SAME global step (the notice propagates via an all-reduced flag),
+#   4. restart as a SINGLE process and require the mid-V-cycle resume line
+#      (checkpoints are process-count-elastic).
+#
 # Exercises the whole path -- CLI, CheckpointManager atomic publish, VCycleState
 # restore, PreemptionGuard -- not just the library functions (see also
-# tests/test_system.py::test_vcycle_launcher_sigkill_resume and
-# ::test_vcycle_launcher_sigterm_checkpoints).
+# tests/test_system.py::test_vcycle_launcher_sigkill_resume,
+# ::test_vcycle_launcher_sigterm_checkpoints and tests/test_multiprocess.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -24,7 +33,10 @@ CKPT=$(mktemp -d)
 LOG=$(mktemp)
 CKPT2=$(mktemp -d)
 LOG2=$(mktemp)
-trap 'rm -rf "$CKPT" "$LOG" "$CKPT2" "$LOG2"' EXIT
+CKPT3=$(mktemp -d)
+LOG3A=$(mktemp)
+LOG3B=$(mktemp)
+trap 'rm -rf "$CKPT" "$LOG" "$CKPT2" "$LOG2" "$CKPT3" "$LOG3A" "$LOG3B"' EXIT
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 ARGS=(--arch tinyllama-1.1b --smoke --vcycle --levels 2 --steps 40
@@ -84,3 +96,45 @@ OUT2=$(python -m repro.launch.train "${ARGS2[@]}")
 LINE2=$(echo "$OUT2" | grep -m1 "resumed from step") || {
   echo "FAIL: restart did not resume from the preemption save"; echo "$OUT2" | tail -20; exit 1; }
 echo "PASS (act 2): $LINE2"
+
+# ----- Act 3: 2-process coordinated SIGTERM drain + 1-process resume --------
+PORT=$(python -c "import socket; s=socket.socket(); s.bind(('127.0.0.1',0)); print(s.getsockname()[1]); s.close()")
+ARGS3=(--arch tinyllama-1.1b --smoke --vcycle --levels 2 --steps 40
+       --batch 4 --seq 16 --f32 --ckpt-dir "$CKPT3" --ckpt-every 1000)
+MP=(--mesh 2x1 --coordinator "127.0.0.1:$PORT" --num-processes 2)
+
+python -m repro.launch.train "${ARGS3[@]}" "${MP[@]}" --process-id 0 >"$LOG3A" 2>&1 &
+PID3A=$!
+python -m repro.launch.train "${ARGS3[@]}" "${MP[@]}" --process-id 1 >"$LOG3B" 2>&1 &
+PID3B=$!
+
+# wait (up to ~4 min) until the cycle is demonstrably past the first segment
+for _ in $(seq 1 2400); do
+  grep -q "coalescing" "$LOG3A" 2>/dev/null && break
+  kill -0 "$PID3A" 2>/dev/null || break
+  sleep 0.1
+done
+kill -0 "$PID3A" 2>/dev/null && kill -0 "$PID3B" 2>/dev/null || {
+  echo "FAIL: a process died before SIGTERM could be delivered"
+  tail -20 "$LOG3A"; tail -20 "$LOG3B"; exit 1; }
+
+kill -TERM "$PID3B"  # ONE process gets the preemption notice...
+RCA=0; RCB=0
+wait "$PID3A" || RCA=$?
+wait "$PID3B" || RCB=$?
+[ "$RCA" -eq 0 ] && [ "$RCB" -eq 0 ] || {
+  echo "FAIL: drain exits were rc=$RCA/rc=$RCB (want 0/0)"
+  tail -20 "$LOG3A"; tail -20 "$LOG3B"; exit 1; }
+# ...and BOTH drain through the same final-save step
+STEP_A=$(grep -o "blocking V-cycle checkpoint at global_step [0-9]*" "$LOG3A" | grep -o "[0-9]*$")
+STEP_B=$(grep -o "blocking V-cycle checkpoint at global_step [0-9]*" "$LOG3B" | grep -o "[0-9]*$")
+[ -n "$STEP_A" ] && [ "$STEP_A" = "$STEP_B" ] || {
+  echo "FAIL: drain steps disagree ('$STEP_A' vs '$STEP_B')"
+  tail -20 "$LOG3A"; tail -20 "$LOG3B"; exit 1; }
+[ -f "$CKPT3/manifest.json" ] || { echo "FAIL: drain wrote no checkpoint"; exit 1; }
+
+OUT3=$(python -m repro.launch.train "${ARGS3[@]}")   # single process, no mesh
+LINE3=$(echo "$OUT3" | grep -m1 "resumed at phase=") || {
+  echo "FAIL: single-process restart did not resume the 2-process save"
+  echo "$OUT3" | tail -20; exit 1; }
+echo "PASS (act 3): both processes drained at step $STEP_A; $LINE3"

@@ -5,16 +5,26 @@ Design (scaled-down but faithful to multi-host practice):
 * **Atomic**: each save writes into ``step_XXXXXXXX.tmp/`` then ``os.rename``s
   to ``step_XXXXXXXX/`` and finally rewrites ``manifest.json`` -- a crash at
   any point leaves the previous checkpoint fully intact (preemption-safe).
-* **Sharded layout**: leaves are stored as one ``.npy`` per leaf path inside
-  the step directory (at real multi-host scale one file per host-shard; here
-  one process owns all shards).  Arrays are fetched from device with
-  ``jax.device_get`` -- works for sharded arrays on any mesh.
-* **Elastic restore**: checkpoints store *logical* (unsharded) arrays, so a
-  checkpoint written under mesh A restores onto mesh B by passing target
-  ``shardings`` -- re-sharding happens in ``jax.device_put``.
+* **Sharded layout**: in single-process runs leaves are stored as one
+  ``.npy`` per leaf path inside the step directory.  In multi-process runs
+  (``jax.process_count() > 1``) saves are COORDINATED: each process writes
+  only the array chunks it addressably owns (replica 0 of each unique shard)
+  into ``step_XXXXXXXX.tmp/shard_<pid>/<tree>/...`` plus a per-process
+  ``index.json`` recording global shapes and chunk offsets; a barrier
+  precedes the process-0 publish (rename + manifest), so a crash on ANY
+  process before the barrier leaves the previous checkpoint fully intact.
+  ``save_tree`` (the single-process path) refuses leaves that are not fully
+  addressable -- ``jax.device_get`` on those would gather garbage.
+* **Elastic restore**: checkpoints store *logical* (unsharded) arrays --
+  whole-leaf files and shard chunks reassemble to the same logical value --
+  so a checkpoint written under mesh A (and any process count) restores onto
+  mesh B (and any other process count) by passing target ``shardings``;
+  re-sharding happens in ``jax.device_put`` / ``make_array_from_callback``.
 * **Async**: ``save(..., blocking=False)`` snapshots to host memory
   synchronously (cheap) and writes files on a background thread, overlapping
-  I/O with the next training steps.
+  I/O with the next training steps.  Coordinated multi-process saves are
+  always synchronous: the publish barrier must not run collectives/RPCs on a
+  background thread while the training loop is mid-collective.
 * **V-cycle aware**: arbitrary JSON metadata rides along in the manifest.
   ``launch/train.py`` stores the full ``VCycleState`` addressing -- phase,
   level, segment index, step-within-segment, global step, cumulative FLOPs,
@@ -32,6 +42,7 @@ Design (scaled-down but faithful to multi-host practice):
 """
 from __future__ import annotations
 
+import glob
 import json
 import os
 import shutil
@@ -47,6 +58,9 @@ import numpy as np
 # "/" -> "__" scheme that corrupted any leaf containing a literal "__".
 _LAYOUT_MARKER = "leafenc.json"
 _LAYOUT_VERSION = 2
+# per-process chunk index written into every shard_<pid>/ dir of a
+# coordinated (multi-process) save
+_SHARD_INDEX = "index.json"
 
 
 def _flatten(tree, prefix=""):
@@ -74,9 +88,28 @@ def _unflatten_into(flat: Dict[str, np.ndarray], like):
     return rec(like, "")
 
 
+def _host_leaf(x) -> np.ndarray:
+    """Fetch one leaf to host, refusing to gather garbage.
+
+    A leaf sharded across processes is NOT fully addressable here;
+    ``jax.device_get`` on it either raises or (for some layouts) silently
+    returns only the local portion -- either way the single-process save path
+    must not be fed one.  Multi-process runs go through the coordinated
+    chunked writer (``CheckpointManager._save_coordinated``) instead.
+    """
+    if getattr(x, "is_fully_addressable", True) is False:
+        raise ValueError(
+            "cannot save a leaf that is not fully addressable from this "
+            "process (it is sharded across processes); use "
+            "CheckpointManager.save under jax.distributed -- the coordinated "
+            "path writes per-process shard files -- instead of save_tree")
+    return np.asarray(jax.device_get(x))
+
+
 def save_tree(path: str, tree) -> None:
+    """Single-process whole-leaf layout (one ``.npy`` per leaf path)."""
     os.makedirs(path, exist_ok=True)
-    flat = _flatten(jax.device_get(tree))
+    flat = _flatten(jax.tree.map(_host_leaf, tree))
     for k, v in flat.items():
         fn = os.path.join(path, quote(k, safe="") + ".npy")
         np.save(fn, np.asarray(v), allow_pickle=False)
@@ -84,38 +117,121 @@ def save_tree(path: str, tree) -> None:
         json.dump({"version": _LAYOUT_VERSION, "encoding": "percent"}, f)
 
 
+def _write_tree_chunks(tree_dir: str, tree) -> Dict[str, Any]:
+    """One process's share of a coordinated save: write the chunks this
+    process owns (replica 0 of each unique shard, so every unique piece of
+    data is written exactly once globally) and return the index entries.
+
+    Leaves that are not jax Arrays spanning processes (host scalars, numpy,
+    single-process arrays) are identical on every process by construction --
+    process 0 writes them whole.
+    """
+    os.makedirs(tree_dir, exist_ok=True)
+    index: Dict[str, Any] = {}
+    for k, v in _flatten(tree).items():
+        enc = quote(k, safe="")
+        chunks = []
+        if getattr(v, "is_fully_addressable", True) is False:
+            for j, sh in enumerate(v.addressable_shards):
+                if sh.replica_id != 0:
+                    continue
+                data = np.asarray(sh.data)
+                start = [sl.indices(dim)[0]
+                         for sl, dim in zip(sh.index, v.shape)]
+                fn = f"{enc}.c{j}.npy"
+                np.save(os.path.join(tree_dir, fn), data, allow_pickle=False)
+                chunks.append({"file": fn, "start": start,
+                               "shape": list(data.shape)})
+        elif jax.process_index() == 0:
+            data = _host_leaf(v)
+            fn = f"{enc}.c0.npy"
+            np.save(os.path.join(tree_dir, fn), data, allow_pickle=False)
+            chunks.append({"file": fn, "start": [0] * data.ndim,
+                           "shape": list(data.shape)})
+        if chunks:
+            index[k] = {"shape": list(np.shape(v)), "chunks": chunks}
+    return index
+
+
+def _read_leaves(path: str) -> Dict[str, np.ndarray]:
+    """All leaves of one tree dir as logical host arrays.
+
+    Understands every on-disk generation: whole-leaf files in ``path`` (v2
+    percent-encoded and the legacy ``__`` scheme) AND coordinated-save chunk
+    files in sibling ``shard_<pid>/`` dirs, which are reassembled into full
+    logical arrays regardless of how many processes wrote them.
+    """
+    flat: Dict[str, np.ndarray] = {}
+    if os.path.isdir(path):
+        if os.path.exists(os.path.join(path, _LAYOUT_MARKER)):
+            decode = unquote
+        else:  # legacy layout: "/" was stored as "__" (lossy for literal "__")
+            decode = lambda s: s.replace("__", "/")
+        for fn in os.listdir(path):
+            if fn.endswith(".npy"):
+                flat[decode(fn[:-4])] = np.load(os.path.join(path, fn),
+                                                allow_pickle=False)
+    step_dir, tree_key = os.path.split(os.path.normpath(path))
+    for sd in sorted(glob.glob(os.path.join(step_dir, "shard_*"))):
+        idx_path = os.path.join(sd, _SHARD_INDEX)
+        if not os.path.exists(idx_path):
+            continue
+        with open(idx_path) as f:
+            trees = json.load(f)["trees"]
+        for k, rec in trees.get(tree_key, {}).items():
+            for ch in rec["chunks"]:
+                data = np.load(os.path.join(sd, tree_key, ch["file"]),
+                               allow_pickle=False)
+                if k not in flat:
+                    flat[k] = np.empty(rec["shape"], dtype=data.dtype)
+                sl = tuple(slice(st, st + sz)
+                           for st, sz in zip(ch["start"], ch["shape"]))
+                flat[k][sl] = data
+    return flat
+
+
+def _put(x, like, sharding):
+    """Land one restored logical leaf, casting to the like-leaf dtype.  When
+    the target sharding spans processes, ``device_put`` of host data is
+    impossible -- build the global array from addressable pieces instead."""
+    host = np.asarray(x).astype(
+        like.dtype if hasattr(like, "dtype") else x.dtype)
+    if sharding is None:
+        return jax.device_put(host)
+    if getattr(sharding, "is_fully_addressable", True):
+        return jax.device_put(host, sharding)
+    return jax.make_array_from_callback(host.shape, sharding,
+                                        lambda idx: host[idx])
+
+
 def restore_tree(path: str, like, shardings=None):
-    if os.path.exists(os.path.join(path, _LAYOUT_MARKER)):
-        decode = unquote
-    else:  # legacy layout: "/" was stored as "__" (lossy for literal "__")
-        decode = lambda s: s.replace("__", "/")
-    flat = {}
-    for fn in os.listdir(path):
-        if fn.endswith(".npy"):
-            key = decode(fn[:-4])
-            flat[key] = np.load(os.path.join(path, fn), allow_pickle=False)
-    tree = _unflatten_into(flat, like)
+    tree = _unflatten_into(_read_leaves(path), like)
     if shardings is not None:
         # elastic re-shard: checkpoints hold logical (unsharded) arrays, so a
-        # save from mesh A lands on mesh B here; cast to the like-tree dtype
-        # exactly as the unsharded branch does
-        tree = jax.tree.map(
-            lambda x, l, s: jax.device_put(np.asarray(x).astype(
-                l.dtype if hasattr(l, "dtype") else x.dtype), s),
-            tree, like, shardings)
-    else:
-        tree = jax.tree.map(
-            lambda x, l: jax.device_put(np.asarray(x).astype(
-                l.dtype if hasattr(l, "dtype") else x.dtype)), tree, like)
-    return tree
+        # save from mesh A (any process count) lands on mesh B here
+        return jax.tree.map(_put, tree, like, shardings)
+    return jax.tree.map(lambda x, l: _put(x, l, None), tree, like)
 
 
 class CheckpointManager:
+    """Atomic, mesh- and process-count-elastic checkpoint store.
+
+    Single-process: whole-leaf files, optional async writes.  Multi-process
+    (``jax.process_count() > 1``): every process participates in ``save`` --
+    each writes only its addressable shard chunks, all meet at a barrier, and
+    ONLY process 0 publishes (rename + manifest + GC), so the manifest flips
+    exactly once and a crash anywhere before the barrier leaves the previous
+    checkpoint referenced and intact.  ``restore`` reassembles logical arrays
+    from whichever layout was written, onto whatever mesh and process count
+    the restoring run uses.
+    """
+
     def __init__(self, directory: str, keep_last: int = 3):
         self.dir = directory
         self.keep_last = keep_last
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._save_seq = 0  # barrier-name uniquifier (same sequence on every process)
 
     # ---- manifest ----------------------------------------------------
     @property
@@ -164,9 +280,17 @@ class CheckpointManager:
     # ---- save ---------------------------------------------------------
     def save(self, step: int, state: Dict[str, Any], meta: Optional[Dict] = None,
              blocking: bool = True) -> None:
-        """state: dict of named pytrees, e.g. {"params":…, "opt":…}."""
+        """state: dict of named pytrees, e.g. {"params":…, "opt":…}.
+
+        In multi-process runs every process MUST call this at the same step
+        (the drivers do -- the cadence is deterministic); the save is then
+        coordinated and always synchronous, whatever ``blocking`` says.
+        """
         self.wait()
-        host_state = jax.device_get(state)  # synchronous snapshot
+        if jax.process_count() > 1:
+            self._save_coordinated(step, state, meta)
+            return
+        host_state = jax.tree.map(_host_leaf, state)  # synchronous snapshot
 
         def _write():
             name = f"step_{step:08d}"
@@ -193,6 +317,48 @@ class CheckpointManager:
             self._thread = threading.Thread(target=_write, daemon=True)
             self._thread.start()
 
+    def _save_coordinated(self, step: int, state: Dict[str, Any],
+                          meta: Optional[Dict]) -> None:
+        """Multi-process save: per-process shard chunks, barrier, then a
+        process-0-only publish.  Assumes the checkpoint directory is shared
+        (the standard multi-host arrangement; on this container: localhost)."""
+        from repro.distributed import barrier
+
+        pid = jax.process_index()
+        self._save_seq += 1
+        tag = f"ckpt-{os.path.basename(self.dir)}-{self._save_seq}"
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        final = os.path.join(self.dir, name)
+        if pid == 0:
+            if os.path.isdir(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+        barrier(f"{tag}-prep")
+        shard_dir = os.path.join(tmp, f"shard_{pid:03d}")
+        os.makedirs(shard_dir, exist_ok=True)
+        index = {key: _write_tree_chunks(os.path.join(shard_dir, key), tree)
+                 for key, tree in state.items()}
+        with open(os.path.join(shard_dir, _SHARD_INDEX), "w") as f:
+            json.dump({"process": pid, "trees": index}, f)
+        # every process's chunks are on disk before anyone publishes; a crash
+        # before this point leaves only a .tmp dir -- the previous checkpoint
+        # (and the manifest pointing at it) stays fully intact
+        barrier(f"{tag}-written")
+        if pid == 0:
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta or {}, f)
+            if os.path.isdir(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish
+            with open(self.manifest_path + ".tmp", "w") as f:
+                json.dump({"dir": name, "step": step, "meta": meta or {}}, f)
+            os.replace(self.manifest_path + ".tmp", self.manifest_path)
+            self._gc()
+        # nobody returns (and e.g. restores, or exits on a preemption drain)
+        # until the manifest references the new step
+        barrier(f"{tag}-published")
+
     def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()
@@ -214,6 +380,12 @@ class CheckpointManager:
             if d == current:
                 continue
             shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+        # stale .tmp dirs from a crashed earlier run: _gc only runs inside a
+        # publish, at which point no save (local thread or peer process -- all
+        # are past the write barrier) can still be filling one
+        for d in os.listdir(self.dir):
+            if d.endswith(".tmp") and os.path.isdir(os.path.join(self.dir, d)):
+                shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
 
     # ---- restore --------------------------------------------------------
     def restore(self, like_state: Dict[str, Any], shardings: Optional[Dict] = None):

@@ -332,10 +332,13 @@ class VCycleRunner:
         if self.mesh is None:
             return None
         if self._batch_sh is None:
-            from repro.distributed import batch_shardings
+            from repro.distributed import batch_like, batch_shardings
 
-            like = jax.eval_shape(self.batch_fn, 0)
-            self._batch_sh = batch_shardings(like, self.mesh)
+            # batch_like honors a GlobalBatchFn's precomputed .like: the
+            # multi-process host->global batch conversion cannot be traced
+            # by jax.eval_shape
+            self._batch_sh = batch_shardings(batch_like(self.batch_fn),
+                                             self.mesh)
         return self._batch_sh
 
     def step_fn(self, level: int) -> Callable:
@@ -346,31 +349,46 @@ class VCycleRunner:
             if self.mesh is None:
                 fn = jax.jit(step, donate_argnums=(0, 1))
             else:
+                from jax.sharding import NamedSharding, PartitionSpec
+
                 psh, osh = self.level_shardings(level)
+                # metrics are explicitly replicated: the host loss fetch
+                # (float()) must work on every process of a multi-process mesh
+                rep = NamedSharding(self.mesh, PartitionSpec())
                 fn = jax.jit(step,
                              in_shardings=(psh, osh, self.batch_shardings()),
-                             out_shardings=(psh, osh, None),
+                             out_shardings=(psh, osh, rep),
                              donate_argnums=(0, 1))
             self._step_fns[level] = fn
             self.n_compiles += 1
         return fn
 
     def init_state(self) -> Tuple[VCycleState, Any]:
-        """Fresh (state, params) for an uninterrupted run."""
+        """Fresh (state, params) for an uninterrupted run.  The init is
+        deterministic, so on a multi-process mesh every process computes the
+        same full value and keeps only its addressable shards."""
+        from repro.distributed import put_global_tree
+
         params = self.models[0].init(jax.random.PRNGKey(self.seed))
         psh, _ = self.level_shardings(0)
         if psh is not None:
-            params = jax.device_put(params, psh)
+            params = put_global_tree(params, psh)
         return VCycleState(), params
 
     def _init_opt(self, level: int, params):
         """Fresh optimizer state for ``level`` (re-init at transitions, paper
         App. C), laid out on the mesh when there is one."""
-        opt_state = adamw_init(params, self.tc)
+        from repro.distributed import put_global_tree
+
         _, osh = self.level_shardings(level)
-        if osh is not None:
-            opt_state = jax.device_put(opt_state, osh)
-        return opt_state
+        if osh is None:
+            return adamw_init(params, self.tc)
+        # zeros are built from shapes (host-local), then landed shard-wise --
+        # adamw_init on global params would otherwise try a cross-process
+        # device_put
+        like = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype),
+                            params)
+        return put_global_tree(adamw_init(like, self.tc), osh)
 
     def _transition(self, state: VCycleState, plan: SegmentPlan, params):
         """Apply the post-segment operator (Alg. 1 lines 3-4 / 7-9); with a

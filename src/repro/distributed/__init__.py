@@ -1,3 +1,12 @@
+from repro.distributed.multiprocess import (  # noqa: F401
+    any_process_flag,
+    as_global_batch_fn,
+    barrier,
+    batch_like,
+    is_primary,
+    put_global,
+    put_global_tree,
+)
 from repro.distributed.sharding import (  # noqa: F401
     RULES,
     activation_spec,

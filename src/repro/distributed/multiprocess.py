@@ -1,0 +1,162 @@
+"""Multi-process (multi-host) coordination primitives.
+
+Everything here degrades to a no-op / identity in single-process runs, so the
+exact same driver code paths serve CPU smoke tests and real multi-host
+launches (``jax.distributed.initialize`` lives in ``repro.launch.mesh`` --
+see ``init_distributed`` -- because it must run before backend init).
+
+Three multi-process facts the rest of the codebase leans on:
+
+* **Non-addressable arrays cannot be device_put from host data.**  A global
+  array sharded (or even just replicated) across processes must be built with
+  ``jax.make_array_from_callback`` from each process's addressable slices --
+  :func:`put_global` and :func:`GlobalBatchFn` wrap that.
+* **Collectives must be called symmetrically.**  Every process must reach the
+  same collective in the same order, so coordinated decisions (the preemption
+  drain flag) are polled unconditionally once per step on every process --
+  :func:`any_process_flag`.
+* **Checkpoint publish needs a barrier.**  :func:`barrier` prefers the
+  coordination-service barrier (pure RPC, no device computation -- safe to
+  call between training steps without interleaving extra collectives) and
+  falls back to ``sync_global_devices``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_BARRIER_TIMEOUT_MS = 10 * 60 * 1000
+
+
+def process_count() -> int:
+    return int(jax.process_count())
+
+
+def process_index() -> int:
+    return int(jax.process_index())
+
+
+def is_primary() -> bool:
+    """True on the process that owns logging / watchdog / manifest publish."""
+    return process_index() == 0
+
+
+def _coordination_client():
+    try:  # private but stable across the 0.4.x line; None when not distributed
+        from jax._src import distributed as _dist
+
+        return _dist.global_state.client
+    except Exception:
+        return None
+
+
+def barrier(name: str) -> None:
+    """Block until every process reaches this barrier (no-op single-process).
+
+    ``name`` must be unique per synchronization point (the checkpoint manager
+    keys it on a per-save sequence number).  Uses the distributed
+    coordination-service barrier when available -- a pure RPC, so it cannot
+    interleave device collectives with a training step that is still flushing
+    -- and falls back to ``multihost_utils.sync_global_devices``.
+    """
+    if process_count() == 1:
+        return
+    client = _coordination_client()
+    if client is not None:
+        client.wait_at_barrier(f"repro:{name}", timeout_in_ms=_BARRIER_TIMEOUT_MS)
+        return
+    from jax.experimental import multihost_utils
+
+    multihost_utils.sync_global_devices(name)
+
+
+def any_process_flag(flag: bool) -> bool:
+    """Cross-process OR of a host-side flag (identity single-process).
+
+    This is a collective: in multi-process runs EVERY process must call it at
+    the same point (the drivers poll it exactly once per training step), which
+    is also what makes the result well-defined -- all processes see the same
+    answer at the same step, so e.g. a SIGTERM delivered to one process drains
+    the whole job at one agreed step boundary.
+    """
+    if process_count() == 1:
+        return bool(flag)
+    from jax.experimental import multihost_utils
+
+    got = multihost_utils.process_allgather(
+        np.asarray([1 if flag else 0], np.int32))
+    return bool(np.asarray(got).sum() > 0)
+
+
+def put_global(x: Any, sharding) -> jax.Array:
+    """``jax.device_put`` that also works when ``sharding`` spans processes.
+
+    The caller must hold the FULL logical value on every process (true for
+    deterministic inits, host-regenerated batches and reassembled checkpoint
+    leaves); each process materializes only its addressable shards.
+    """
+    if sharding is None:
+        return x
+    if getattr(sharding, "is_fully_addressable", True):
+        return jax.device_put(x, sharding)
+    host = np.asarray(jax.device_get(x))
+    return jax.make_array_from_callback(
+        host.shape, sharding, lambda idx: host[idx])
+
+
+def put_global_tree(tree, shardings):
+    """Tree version of :func:`put_global` (``shardings=None`` -> identity)."""
+    if shardings is None:
+        return tree
+    return jax.tree.map(put_global, tree, shardings)
+
+
+class GlobalBatchFn:
+    """Wrap a host-batch fn for a mesh that spans processes.
+
+    The global batch is process-count-invariant: every process regenerates THE
+    canonical batch for a step deterministically (``data/synthetic``: batches
+    are pure functions of (seed, step, shard), so any host can do this) and
+    materializes only the rows its data-axis coordinate addresses
+    (``distributed.data_shard_index`` names that slice).  A 2-process
+    ``--mesh 2x1`` run therefore consumes exactly the same data stream as a
+    1-process run -- which is what makes cross-process-count resume and the
+    equivalence tests well-posed.
+
+    ``like`` exposes the batch's ShapeDtypeStruct tree without tracing through
+    the host->global conversion (``jax.eval_shape`` cannot, because the
+    conversion calls ``device_get``).
+    """
+
+    def __init__(self, batch_fn, mesh, rules=None):
+        from repro.distributed.sharding import batch_shardings
+
+        self.inner = batch_fn
+        self.mesh = mesh
+        self.like = jax.eval_shape(batch_fn, 0)
+        self.shardings = batch_shardings(self.like, mesh, rules)
+
+    def __call__(self, step):
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                            self.inner(step))
+        return jax.tree.map(
+            lambda x, s: jax.make_array_from_callback(
+                x.shape, s, lambda idx, x=x: x[idx]),
+            host, self.shardings)
+
+
+def as_global_batch_fn(batch_fn, mesh: Optional[Any], rules=None):
+    """Multi-process-safe batch fn (identity when one process or no mesh)."""
+    if mesh is None or process_count() == 1:
+        return batch_fn
+    return GlobalBatchFn(batch_fn, mesh, rules)
+
+
+def batch_like(batch_fn):
+    """ShapeDtypeStruct tree for ``batch_fn`` -- honors a precomputed
+    ``.like`` (set by :class:`GlobalBatchFn`, whose host->global conversion
+    cannot be traced by ``jax.eval_shape``)."""
+    like = getattr(batch_fn, "like", None)
+    return like if like is not None else jax.eval_shape(batch_fn, 0)

@@ -1,13 +1,29 @@
-"""Production mesh construction.
+"""Production mesh construction + multi-process bring-up.
 
 Defined as FUNCTIONS (never module-level constants) so importing this module
 never touches jax device state -- required for the dry-run's placeholder-device
-bootstrap ordering.
+bootstrap ordering, and for ``init_distributed``'s (flags, collectives,
+``jax.distributed.initialize``) sequence, all of which must run before the
+first backend-initializing call.
+
+Launching multi-process runs (one process per host; CPU-portable, so CI and
+laptops drill the exact same path as a real slice)::
+
+    # terminal 1                                 # terminal 2
+    python -m repro.launch.train \\
+        --arch tinyllama-1.1b --smoke --vcycle \\
+        --mesh 2x1 --coordinator 127.0.0.1:9876 \\
+        --num-processes 2 --process-id 0 ...     # ... --process-id 1 ...
+
+The ("data","model") mesh then spans all processes' devices; each process
+feeds its own data shard, process 0 owns logging and the checkpoint manifest,
+and every process writes only its addressable checkpoint shards (see
+``repro.checkpoint``).
 """
 from __future__ import annotations
 
 import os
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 
@@ -24,8 +40,30 @@ def parse_mesh_arg(spec: str) -> Tuple[int, int]:
     return d, m
 
 
+def _force_host_device_flag(n: int) -> None:
+    """Env-only half of :func:`ensure_host_devices`: set (or raise) the
+    ``--xla_force_host_platform_device_count`` flag without touching jax
+    device state, so it can run before ``jax.distributed.initialize``."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    marker = "--xla_force_host_platform_device_count="
+    if n <= 1:
+        return
+    if marker in flags:
+        # raise an existing, too-small count instead of refusing
+        head, _, rest = flags.partition(marker)
+        val, _, tail = rest.partition(" ")
+        try:
+            have_flag = int(val)
+        except ValueError:
+            have_flag = 0
+        if have_flag < n:
+            os.environ["XLA_FLAGS"] = f"{head}{marker}{n} {tail}".strip()
+    else:
+        os.environ["XLA_FLAGS"] = f"{flags} {marker}{n}".strip()
+
+
 def ensure_host_devices(n: int) -> None:
-    """Force the host (CPU) platform to expose >= ``n`` devices.
+    """Force the host (CPU) platform to expose >= ``n`` LOCAL devices.
 
     Must run before jax initializes its backends (i.e. before the first
     device-touching call -- the launcher calls it straight after arg parsing,
@@ -34,39 +72,68 @@ def ensure_host_devices(n: int) -> None:
     XLA_FLAGS already set by the caller); raises when the backend is already
     live with fewer devices than requested.
     """
-    flags = os.environ.get("XLA_FLAGS", "")
-    marker = "--xla_force_host_platform_device_count="
-    if n > 1:
-        if marker in flags:
-            # raise an existing, too-small count instead of refusing
-            head, _, rest = flags.partition(marker)
-            val, _, tail = rest.partition(" ")
-            try:
-                have_flag = int(val)
-            except ValueError:
-                have_flag = 0
-            if have_flag < n:
-                os.environ["XLA_FLAGS"] = f"{head}{marker}{n} {tail}".strip()
-        else:
-            os.environ["XLA_FLAGS"] = f"{flags} {marker}{n}".strip()
-    have = jax.device_count()
+    _force_host_device_flag(n)
+    have = jax.local_device_count()
     if have < n:
         raise RuntimeError(
-            f"mesh needs {n} devices but jax sees {have} (backend already "
-            f"initialized?); export "
+            f"mesh needs {n} local devices but jax sees {have} (backend "
+            f"already initialized?); export "
             f"XLA_FLAGS=--xla_force_host_platform_device_count={n} before "
             f"launch")
 
 
-def make_cli_mesh(spec: str):
+def init_distributed(coordinator: str, num_processes: int, process_id: int,
+                     *, local_devices: Optional[int] = None) -> None:
+    """Bring up ``jax.distributed`` for a multi-process run (CPU-portable).
+
+    Must run before ANY backend-initializing jax call.  Order matters and is
+    encapsulated here: (1) force the host-platform device count this process
+    must contribute (env only), (2) select the gloo CPU collectives
+    implementation -- the default CPU backend refuses multi-process
+    computations outright -- then (3) connect to the coordinator.  On an
+    accelerator platform (2) is a harmless no-op: collectives ride the
+    accelerator fabric and the forced CPU devices are never part of the mesh.
+
+    Idempotent: a second call (e.g. a library test re-entering the launcher)
+    is ignored once the distributed client is live.
+    """
+    from jax._src import distributed as _dist
+
+    if getattr(_dist.global_state, "client", None) is not None:
+        return
+    if local_devices and local_devices > 1:
+        _force_host_device_flag(local_devices)
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except (AttributeError, ValueError):  # jax build without gloo / renamed
+        pass
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=num_processes,
+                               process_id=process_id)
+
+
+def make_cli_mesh(spec: str, *, num_processes: int = 1):
     """("data", "model") mesh for the launcher's ``--mesh DxM`` flag.
 
-    CPU-backed for tests/smoke: host devices are forced to d*m before the
-    first backend initialization, so ``--mesh 2x4`` works on a laptop exactly
-    like on a slice (the per-device arrays are just tiny).
+    CPU-backed for tests/smoke: each process's host devices are forced to its
+    d*m/num_processes share before the first backend initialization, so
+    ``--mesh 2x4`` works on a laptop exactly like on a slice (the per-device
+    arrays are just tiny).  With ``num_processes > 1`` the caller must have
+    run :func:`init_distributed` first; the mesh then spans every process's
+    devices (process-major device order, so a 2x1 mesh puts process 0 at data
+    coordinate 0).
     """
     d, m = parse_mesh_arg(spec)
-    ensure_host_devices(d * m)
+    total = d * m
+    if total % num_processes:
+        raise ValueError(
+            f"--mesh {spec} has {total} devices, not divisible over "
+            f"{num_processes} processes")
+    ensure_host_devices(total // num_processes)
+    if jax.device_count() < total:
+        raise RuntimeError(
+            f"mesh {spec} needs {total} devices but jax sees "
+            f"{jax.device_count()} across {jax.process_count()} processes")
     return jax.make_mesh((d, m), ("data", "model"))
 
 

@@ -58,9 +58,28 @@ class Server:
         self.last_tok = np.zeros((batch,), np.int32)
         self.active: List[Optional[Request]] = [None] * batch
         self.done: List[Request] = []
+        self.rejected: List[Request] = []  # oversized prompts (see admit)
 
     # -- continuous batching ------------------------------------------------
+    def fits(self, req: Request) -> bool:
+        """The admission invariant, in ONE place: decode must be able to
+        write at least one token at a valid cache index."""
+        return len(req.prompt) <= self.max_seq - 1
+
     def admit(self, req: Request) -> bool:
+        """Prefill ``req`` into a free slot; False when all slots are busy.
+
+        Raises ``ValueError`` for prompts that can never fit: a prompt needs
+        ``len(prompt) <= max_seq - 1`` so decode can write at least one token
+        -- longer ones used to crash in ``_splice`` (negative pad) or, worse,
+        run with ``pos >= max_seq`` so the cache ``.at[pos].set`` silently
+        dropped every out-of-range write and decoded garbage.
+        """
+        if not self.fits(req):
+            raise ValueError(
+                f"prompt of length {len(req.prompt)} cannot be admitted: "
+                f"max_seq={self.max_seq} leaves no room to decode "
+                f"(need len(prompt) <= max_seq - 1)")
         for slot in range(self.batch):
             if self.active[slot] is None:
                 toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
@@ -75,7 +94,6 @@ class Server:
                 logits, pc = self.prefill(self.params, toks,
                                           extras.get("img_embeds"), extras.get("enc_frames"))
                 # pad the single-sequence cache seq dim up to max_seq and splice
-                pc = jax.tree.map(lambda x: x, pc)
                 self.cache = self._splice(pc, slot, len(req.prompt))
                 self.active[slot] = req
                 self.pos[slot] = len(req.prompt)
@@ -116,17 +134,32 @@ class Server:
             if req is None:
                 continue
             req.out.append(int(nxt[slot]))
-            self.pos[slot] += 1
+            # cap at the last valid cache index: a slot freed this tick must
+            # never carry a pos the decode cache write would silently drop
+            self.pos[slot] = min(self.pos[slot] + 1, self.max_seq - 1)
             self.last_tok[slot] = nxt[slot]
             if len(req.out) >= req.max_new or self.pos[slot] >= self.max_seq - 1:
                 self.done.append(req)
                 self.active[slot] = None
 
     def run(self, requests: List[Request], max_ticks: int = 10_000) -> List[Request]:
+        """Drain ``requests``: admit into free slots, decode, recycle slots.
+
+        Oversized prompts (see :meth:`admit`) are rejected up front into
+        ``self.rejected`` instead of wedging the queue head forever.
+        """
         queue = list(requests)
         ticks = 0
         while (queue or any(self.active)) and ticks < max_ticks:
-            while queue and self.admit(queue[0]):
+            while queue:
+                if not self.fits(queue[0]):
+                    req = queue.pop(0)
+                    self.rejected.append(req)
+                    print(f"[serve] rejected req {req.rid}: prompt length "
+                          f"{len(req.prompt)} > max_seq-1 = {self.max_seq - 1}")
+                    continue
+                if not self.admit(queue[0]):
+                    break
                 queue.pop(0)
             if any(a is not None for a in self.active):
                 self.step()

@@ -20,12 +20,24 @@ path drives a sharded mesh via ``--mesh DxM``), with:
   so a run saved under ``--mesh 1x2`` resumes under ``--mesh 2x1`` (or no
   mesh at all) -- including mid-upward-sweep with the ``params_before_*``
   stashes re-sharded (tests/test_distributed.py pins the equivalence),
-* preemption awareness: SIGTERM triggers ONE final blocking checkpoint at
-  the next step boundary and a clean exit 0, instead of hoping the cadence
-  saved recently (scripts/smoke_resume.sh act 2 drills this),
+* multi-process (multi-host) training: ``--coordinator ADDR
+  --num-processes N --process-id I`` runs ``jax.distributed.initialize``
+  (CPU-portable: gloo collectives + forced host devices, so CI drills the
+  same path as a real slice) and the ``--mesh`` then SPANS processes.
+  Process roles are explicit -- logging, the watchdog and the checkpoint
+  manifest publish live on process 0 only; every process feeds its own data
+  shard and writes only its addressable checkpoint shards (coordinated save
+  with a barrier before publish, see ``repro.checkpoint``); checkpoints stay
+  logical, so a run saved by 2 processes resumes under 1 (and vice versa),
+* preemption awareness: SIGTERM on ANY ONE process propagates through an
+  all-reduced drain flag, so every process runs the SAME final blocking
+  checkpoint at one agreed step boundary and exits 0, instead of hoping the
+  cadence saved recently (scripts/smoke_resume.sh acts 2+3 drill this),
 * deterministic host-sharded synthetic data keyed on
   ``repro.distributed.data_shard_index`` (any host can regenerate any
-  shard -> straggler/elastic-safe; data-parallel hosts get distinct shards),
+  shard -> straggler/elastic-safe; a data-parallel process's shard is its
+  slice of the process-count-invariant global batch, so runs agree across
+  process counts),
 * a step-time watchdog that flags stragglers (steps slower than ``factor`` x
   the median of PRIOR step times are logged) on both drivers.
 
@@ -34,6 +46,10 @@ Examples:
       --steps 50 --ckpt-dir /tmp/ck
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b --smoke \
       --vcycle --mesh 1x2 --steps 20 --ckpt-dir /tmp/ck
+  # multi-process (run one per host / terminal; same args except --process-id)
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b --smoke \
+      --vcycle --mesh 2x1 --steps 20 --ckpt-dir /tmp/ck \
+      --coordinator 127.0.0.1:9876 --num-processes 2 --process-id 0
 """
 from __future__ import annotations
 
@@ -55,8 +71,10 @@ from repro.core import flops as flops_lib
 from repro.core import operators as ops
 from repro.core.vcycle import History, VCycleOutput, VCycleRunner, VCycleState
 from repro.data import MarkovLM, lm_batch, masked_lm_batch, vision_batch
-from repro.distributed import batch_shardings, data_shard_index, mesh_ctx
-from repro.launch.mesh import make_cli_mesh
+from repro.distributed import (any_process_flag, as_global_batch_fn,
+                               batch_like, batch_shardings, data_shard_index,
+                               is_primary, mesh_ctx, put_global_tree)
+from repro.launch.mesh import init_distributed, make_cli_mesh, parse_mesh_arg
 from repro.models.api import (build_model, init_train_state, make_train_step,
                               train_state_shardings, zero_train_state)
 from repro.optim import adamw_init
@@ -88,6 +106,23 @@ def make_batch_fn(cfg, tc: TrainConfig, shard: int = 0):
     return fn
 
 
+def make_driver_batch_fn(cfg, tc: TrainConfig, mesh):
+    """The launcher's per-process batch stream.
+
+    Single-process: the canonical shard named by ``data_shard_index`` (0).
+    Multi-process: every process regenerates the SAME canonical global batch
+    (``data/synthetic`` batches are pure functions of (seed, step, shard), so
+    any host can) and materializes only the rows its data-axis coordinate --
+    ``data_shard_index(mesh)`` -- addresses.  The global data stream is
+    therefore invariant to the process count, which is what makes the
+    2-process-vs-1-process equivalence and cross-process-count resume
+    well-posed (tests/test_multiprocess.py pins both).
+    """
+    if jax.process_count() > 1:
+        return as_global_batch_fn(make_batch_fn(cfg, tc, shard=0), mesh)
+    return make_batch_fn(cfg, tc, shard=data_shard_index(mesh))
+
+
 class Watchdog:
     """Step-time straggler detector (multi-host analogue: per-host heartbeat)."""
 
@@ -114,12 +149,18 @@ class Watchdog:
 
 
 class PreemptionGuard:
-    """SIGTERM-aware preemption notice.
+    """SIGTERM-aware preemption notice, coordinated across processes.
 
     The handler only sets a flag (async-signal-safe); the training loops poll
-    it once per step and run ONE final *blocking* checkpoint before exiting 0
-    -- preempted pods save at the notice instead of waiting for the
-    ``--ckpt-every`` cadence.
+    :meth:`should_stop` exactly once per step and run ONE final *blocking*
+    checkpoint before exiting 0 -- preempted pods save at the notice instead
+    of waiting for the ``--ckpt-every`` cadence.
+
+    In multi-process runs ``should_stop`` all-reduces the flag, so a SIGTERM
+    delivered to ANY ONE process drains the whole job: every process sees the
+    notice at the same step boundary, runs the same coordinated final save,
+    and exits 0 together.  Because the poll is a collective, the drivers call
+    it unconditionally each step on every process.
     """
 
     def __init__(self):
@@ -138,38 +179,52 @@ class PreemptionGuard:
         print(f"[preempt] caught signal {signum}; will checkpoint and exit at "
               "the next step boundary", flush=True)
 
+    def should_stop(self) -> bool:
+        """True when ANY process holds a preemption notice (collective in
+        multi-process runs -- call symmetrically, once per step)."""
+        return any_process_flag(self.triggered)
+
 
 def train_plain(cfg, tc: TrainConfig, *, ckpt: Optional[CheckpointManager],
                 ckpt_every: int, verbose: bool = True, mesh=None,
                 preempt: Optional[PreemptionGuard] = None):
     model = build_model(cfg)
-    batch_fn = make_batch_fn(cfg, tc, shard=data_shard_index(mesh))
+    batch_fn = make_driver_batch_fn(cfg, tc, mesh)
     params, opt = init_train_state(model, tc, jax.random.PRNGKey(tc.seed))
     psh = osh = bsh = None
     if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+
         psh, osh = train_state_shardings(model, tc, mesh)
-        params = jax.device_put(params, psh)
-        opt = jax.device_put(opt, osh)
-        bsh = batch_shardings(jax.eval_shape(batch_fn, 0), mesh)
+        # put_global_tree: plain device_put when the mesh is local, shard-wise
+        # landing when it spans processes (init is deterministic, every
+        # process holds the full value)
+        params = put_global_tree(params, psh)
+        opt = put_global_tree(opt, osh)
+        bsh = batch_shardings(batch_like(batch_fn), mesh)
+        metrics_sh = NamedSharding(mesh, PartitionSpec())  # host-readable everywhere
     start = 0
     if ckpt is not None:
         # elastic restore: the checkpoint holds logical arrays, so target
-        # shardings may describe a different mesh than the one that saved
+        # shardings may describe a different mesh (or process count) than the
+        # one that saved
         restored, meta = ckpt.restore(
             {"params": params, "opt": opt},
             shardings=None if mesh is None else {"params": psh, "opt": osh})
         if restored is not None:
             params, opt = restored["params"], restored["opt"]
             start = int(meta.get("step", 0))
-            print(f"[train] resumed from step {start}")
+            if verbose:
+                print(f"[train] resumed from step {start}")
     if mesh is None:
         step_fn = jax.jit(make_train_step(model, tc), donate_argnums=(0, 1))
     else:
         step_fn = jax.jit(make_train_step(model, tc),
                           in_shardings=(psh, osh, bsh),
-                          out_shardings=(psh, osh, None),
+                          out_shardings=(psh, osh, metrics_sh),
                           donate_argnums=(0, 1))
-    wd = Watchdog()
+    # the watchdog is a process-0 role (single-process runs are process 0)
+    wd = Watchdog() if is_primary() else None
     for i in range(start, tc.steps):
         t0 = time.time()
         params, opt, metrics = step_fn(params, opt, batch_fn(i))
@@ -177,8 +232,12 @@ def train_plain(cfg, tc: TrainConfig, *, ckpt: Optional[CheckpointManager],
         # block on device completion only -- the host metric fetch stays on
         # log steps
         jax.block_until_ready(metrics["loss"])
-        wd.observe(time.time() - t0)
-        if preempt is not None and preempt.triggered:
+        if wd is not None:
+            wd.observe(time.time() - t0)
+        # coordinated drain: polled unconditionally once per step on every
+        # process (it is a collective), so a SIGTERM on any ONE process makes
+        # ALL processes save the same step and exit 0 together
+        if preempt is not None and preempt.should_stop():
             if ckpt is not None:
                 ckpt.save(i + 1, {"params": params, "opt": opt},
                           meta={"step": i + 1}, blocking=True)
@@ -305,12 +364,14 @@ def train_vcycle_ckpt(cfg, ml: MultiLevelConfig, tc: TrainConfig, *,
 
     ``mesh`` shards the whole cycle (per-level explicit-sharding train steps
     and sharded level transitions); because checkpoints store logical arrays,
-    the mesh at restore time may differ from the one that saved.  The
-    runner's per-step hook carries the straggler watchdog heartbeat and, when
-    ``preempt`` has triggered (SIGTERM), one final BLOCKING checkpoint
+    the mesh -- and the PROCESS COUNT -- at restore time may differ from the
+    one that saved (a 2-process save resumes under 1 process and vice versa).
+    The runner's per-step hook carries the straggler watchdog heartbeat and
+    the coordinated preemption poll: a SIGTERM on any one process drains ALL
+    processes through one final BLOCKING checkpoint at the same global step,
     followed by a clean exit 0.
     """
-    batch_fn = make_batch_fn(cfg, tc, shard=data_shard_index(mesh))
+    batch_fn = make_driver_batch_fn(cfg, tc, mesh)
     runner = VCycleRunner(cfg, ml, tc, batch_fn, seed=tc.seed, verbose=verbose,
                           mesh=mesh)
     state = params = opt = None
@@ -324,7 +385,8 @@ def train_vcycle_ckpt(cfg, ml: MultiLevelConfig, tc: TrainConfig, *,
                     {"params": like_p},
                     shardings=(None if mesh is None
                                else {"params": runner.level_shardings(0)[0]}))
-                print("[vcycle] checkpoint already complete; returning saved params")
+                if verbose:
+                    print("[vcycle] checkpoint already complete; returning saved params")
                 return VCycleOutput(
                     params=restored["params"],
                     history=History(**{k: list(v) for k, v in
@@ -332,24 +394,29 @@ def train_vcycle_ckpt(cfg, ml: MultiLevelConfig, tc: TrainConfig, *,
                     configs=runner.cfgs,
                     total_flops=float(meta.get("cum_flops", 0.0)))
             state, params, opt = restore_vcycle_state(ckpt, runner, tc)
-            print(f"[vcycle] resumed at phase={state.phase} level={state.level} "
-                  f"seg_step={state.seg_step} global_step={state.global_step}")
+            if verbose:
+                print(f"[vcycle] resumed at phase={state.phase} level={state.level} "
+                      f"seg_step={state.seg_step} global_step={state.global_step}")
     save_cb = (make_vcycle_save_cb(ckpt, schedule=runner.plan)
                if ckpt is not None else None)
     # one watchdog PER LEVEL: a half-width level's steps are ~8x cheaper, so a
-    # shared median would flag every full-size step of the upward sweep
-    wds: Dict[int, Watchdog] = {}
+    # shared median would flag every full-size step of the upward sweep; the
+    # watchdog is a process-0 role (single-process runs are process 0)
+    wds: Optional[Dict[int, Watchdog]] = {} if is_primary() else None
 
     def on_step(st: VCycleState, p, o, stopping: bool, dt: float) -> None:
         # dt is the runner-measured, device-blocked step time, so checkpoint
         # snapshots and level transitions never read as stragglers; each
         # segment's first step is skipped too -- it may carry the level's
         # one-time jit compile inside the timed step call
-        if st.seg_step > 1:
+        if wds is not None and st.seg_step > 1:
             wds.setdefault(st.level, Watchdog()).observe(dt)
-        # a stopping step is never persisted (see VCycleRunner.run), so a
-        # preemption on it just lets the normal completion path finish
-        if preempt is not None and preempt.triggered and not stopping:
+        # coordinated drain: the poll is a collective, so it runs
+        # unconditionally once per step on every process; a stopping step is
+        # never persisted (see VCycleRunner.run), so a preemption on it just
+        # lets the normal completion path finish
+        drain = preempt is not None and preempt.should_stop()
+        if drain and not stopping:
             if save_cb is not None:
                 save_cb(st, p, o, blocking=True)
                 print(f"[preempt] SIGTERM: blocking V-cycle checkpoint at "
@@ -364,7 +431,8 @@ def train_vcycle_ckpt(cfg, ml: MultiLevelConfig, tc: TrainConfig, *,
                   meta={"step": gs, "phase": "done", "level": 0,
                         "global_step": gs, "cum_flops": out.total_flops,
                         "history": out.history.to_dict()})
-    print(f"[vcycle] total training FLOPs: {out.total_flops:.3e}")
+    if verbose:
+        print(f"[vcycle] total training FLOPs: {out.total_flops:.3e}")
     return out
 
 
@@ -381,7 +449,16 @@ def main() -> None:
     ap.add_argument("--alpha", type=float, default=0.25)
     ap.add_argument("--mesh", default="",
                     help="DxM ('data','model') mesh, e.g. 2x4; host CPU devices "
-                         "are forced when the platform has fewer (smoke/tests)")
+                         "are forced when the platform has fewer (smoke/tests); "
+                         "with --num-processes > 1 the mesh spans processes")
+    ap.add_argument("--coordinator", default="127.0.0.1:9876",
+                    help="jax.distributed coordinator host:port (multi-process "
+                         "runs; process 0's address)")
+    ap.add_argument("--num-processes", type=int, default=1,
+                    help="total process count for jax.distributed; every "
+                         "process runs this same command with its own "
+                         "--process-id and a shared --ckpt-dir")
+    ap.add_argument("--process-id", type=int, default=0)
     ap.add_argument("--f32", action="store_true",
                     help="force float32 compute (tight cross-mesh resume "
                          "equivalence; default keeps the config's dtype)")
@@ -390,9 +467,22 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    # the mesh must exist before ANY device-touching jax call: on CPU it may
-    # need to force host device count, which only works pre-backend-init
-    mesh = make_cli_mesh(args.mesh) if args.mesh else None
+    # multi-process bring-up, then the mesh, must both happen before ANY
+    # device-touching jax call: distributed init selects the gloo CPU
+    # collectives and both may need to force the host device count, which
+    # only works pre-backend-init
+    if args.num_processes > 1:
+        if not args.mesh:
+            args.mesh = f"{args.num_processes}x1"  # pure data-parallel default
+        d, m = parse_mesh_arg(args.mesh)
+        init_distributed(args.coordinator, args.num_processes, args.process_id,
+                         local_devices=(d * m) // args.num_processes)
+    mesh = (make_cli_mesh(args.mesh, num_processes=args.num_processes)
+            if args.mesh else None)
+    primary = is_primary()
+    if args.num_processes > 1 and args.ckpt_dir:
+        print(f"[launch] process {jax.process_index()}/{jax.process_count()} "
+              f"up; data shard {data_shard_index(mesh)}", flush=True)
 
     try:
         cfg = get_config(args.arch, smoke=args.smoke)
@@ -412,10 +502,10 @@ def main() -> None:
         if args.vcycle:
             ml = MultiLevelConfig(n_levels=args.levels, alpha=args.alpha)
             train_vcycle_ckpt(cfg, ml, tc, ckpt=ckpt, ckpt_every=args.ckpt_every,
-                              mesh=mesh, preempt=preempt)
+                              mesh=mesh, preempt=preempt, verbose=primary)
         else:
             train_plain(cfg, tc, ckpt=ckpt, ckpt_every=args.ckpt_every,
-                        mesh=mesh, preempt=preempt)
+                        mesh=mesh, preempt=preempt, verbose=primary)
 
 
 if __name__ == "__main__":

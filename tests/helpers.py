@@ -1,4 +1,10 @@
-"""Shared tiny configs for tests."""
+"""Shared tiny configs for tests + a local multi-process launch harness."""
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+
 import jax.numpy as jnp
 
 from repro.config import BlockSpec, ModelConfig, Stage, TrainConfig, uniform_stages
@@ -60,6 +66,80 @@ ALL_FAMILIES = {
     "dense": tiny_dense, "moe": tiny_moe, "mla": tiny_mla, "hybrid": tiny_hybrid,
     "xlstm": tiny_xlstm, "vlm": tiny_vlm, "audio": tiny_audio,
 }
+
+
+# ---------------------------------------------------------------------------
+# multi-process harness: spawn N local CPU processes against a localhost
+# coordinator (the CI-drillable stand-in for an N-host launch)
+
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# Prepended to every worker: brings up jax.distributed from the MP_* env vars
+# the harness sets.  Workers import from `helpers` too (PYTHONPATH carries
+# tests/), so the worker and the test build literally the same tiny configs.
+MP_PRELUDE = textwrap.dedent("""
+    import os
+    from repro.launch.mesh import init_distributed
+    init_distributed(os.environ["MP_COORD"], int(os.environ["MP_NPROCS"]),
+                     int(os.environ["MP_RANK"]))
+    import jax
+    assert jax.process_count() == int(os.environ["MP_NPROCS"])
+""")
+
+
+def free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def run_multiprocess(body: str, n: int = 2, *, env=None, timeout: int = 600,
+                     prelude: str = MP_PRELUDE):
+    """Run ``prelude + body`` in ``n`` local processes under one coordinator.
+
+    Each worker sees MP_RANK / MP_NPROCS / MP_COORD plus any ``env`` extras,
+    with PYTHONPATH covering both ``src`` and ``tests``.  Returns a list of
+    (returncode, combined_output) per rank; callers assert on both.
+    """
+    port = free_port()
+    src = prelude + textwrap.dedent(body)
+    procs = []
+    for rank in range(n):
+        wenv = dict(os.environ,
+                    PYTHONPATH="src" + os.pathsep + "tests",
+                    MP_COORD=f"127.0.0.1:{port}",
+                    MP_NPROCS=str(n), MP_RANK=str(rank), **(env or {}))
+        procs.append(subprocess.Popen(
+            [sys.executable, "-c", src], env=wenv, cwd=_REPO_ROOT,
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True))
+    results = []
+    try:
+        for p in procs:
+            out, _ = p.communicate(timeout=timeout)
+            results.append((p.returncode, out))
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+                p.wait()
+    return results
+
+
+def mp_arena():
+    """The shared tiny V-cycle problem for the multi-process equivalence
+    tests -- built identically by workers and by the asserting test process
+    (f32 so cross-process reduction roundoff is the only drift source;
+    batch 4 divides a 2-way data axis)."""
+    from repro.config import MultiLevelConfig
+
+    cfg = tiny_dense(d_model=32, d_ff=64, vocab_size=128,
+                     compute_dtype=jnp.float32)
+    tc = fast_tc(steps=12, batch_size=4, seq_len=16, log_every=2, peak_lr=3e-4)
+    ml = MultiLevelConfig(n_levels=2, alpha=0.25, e_a_frac=0.25,
+                          e_small_frac=0.5)
+    return cfg, tc, ml
 
 
 def batch_for(cfg: ModelConfig, B=2, S=16):
