@@ -22,6 +22,12 @@
 #   4. restart as a SINGLE process and require the mid-V-cycle resume line
 #      (checkpoints are process-count-elastic).
 #
+# Act 4 -- content-addressed local-dir store through the CLI:
+#   1. run with --ckpt-local-dir (v3 object pool + manifests in a per-host
+#      dir), SIGKILL after the first publish,
+#   2. restart with identical args and require the mid-V-cycle resume line,
+#   3. require the objects/ pool and a step manifest to actually exist.
+#
 # Exercises the whole path -- CLI, CheckpointManager atomic publish, VCycleState
 # restore, PreemptionGuard -- not just the library functions (see also
 # tests/test_system.py::test_vcycle_launcher_sigkill_resume,
@@ -36,7 +42,9 @@ LOG2=$(mktemp)
 CKPT3=$(mktemp -d)
 LOG3A=$(mktemp)
 LOG3B=$(mktemp)
-trap 'rm -rf "$CKPT" "$LOG" "$CKPT2" "$LOG2" "$CKPT3" "$LOG3A" "$LOG3B"' EXIT
+CKPT4=$(mktemp -d)
+LOG4=$(mktemp)
+trap 'rm -rf "$CKPT" "$LOG" "$CKPT2" "$LOG2" "$CKPT3" "$LOG3A" "$LOG3B" "$CKPT4" "$LOG4"' EXIT
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 ARGS=(--arch tinyllama-1.1b --smoke --vcycle --levels 2 --steps 40
@@ -138,3 +146,31 @@ LINE3=$(echo "$OUT3" | grep -m1 "resumed at phase=") || {
   echo "FAIL: single-process restart did not resume the 2-process save"
   echo "$OUT3" | tail -20; exit 1; }
 echo "PASS (act 3): both processes drained at step $STEP_A; $LINE3"
+
+# ----- Act 4: --ckpt-local-dir (content-addressed per-host store) -----------
+ARGS4=(--arch tinyllama-1.1b --smoke --vcycle --levels 2 --steps 40
+       --batch 2 --seq 16 --ckpt-local-dir "$CKPT4" --ckpt-every 3)
+
+python -m repro.launch.train "${ARGS4[@]}" >"$LOG4" 2>&1 &
+PID4=$!
+
+for _ in $(seq 1 2400); do
+  [ -f "$CKPT4/manifest.json" ] && break
+  kill -0 "$PID4" 2>/dev/null || break
+  sleep 0.1
+done
+
+if kill -0 "$PID4" 2>/dev/null; then
+  kill -9 "$PID4"
+  wait "$PID4" 2>/dev/null || true
+  echo "[smoke] SIGKILLed local-dir training after first checkpoint"
+fi
+[ -f "$CKPT4/manifest.json" ] || { echo "FAIL: local-dir wrote no checkpoint"; tail -20 "$LOG4"; exit 1; }
+[ -d "$CKPT4/objects" ] || { echo "FAIL: no content-addressed object pool"; ls "$CKPT4"; exit 1; }
+ls "$CKPT4"/step_*/objects.json >/dev/null 2>&1 || {
+  echo "FAIL: no v3 step manifest"; ls -R "$CKPT4" | head -30; exit 1; }
+
+OUT4=$(python -m repro.launch.train "${ARGS4[@]}")
+LINE4=$(echo "$OUT4" | grep -m1 "resumed at phase=") || {
+  echo "FAIL: restart did not resume from the local-dir store"; echo "$OUT4" | tail -20; exit 1; }
+echo "PASS (act 4): $LINE4"

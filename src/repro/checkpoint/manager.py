@@ -5,40 +5,55 @@ Design (scaled-down but faithful to multi-host practice):
 * **Atomic**: each save writes into ``step_XXXXXXXX.tmp/`` then ``os.rename``s
   to ``step_XXXXXXXX/`` and finally rewrites ``manifest.json`` -- a crash at
   any point leaves the previous checkpoint fully intact (preemption-safe).
-* **Sharded layout**: in single-process runs leaves are stored as one
-  ``.npy`` per leaf path inside the step directory.  In multi-process runs
-  (``jax.process_count() > 1``) saves are COORDINATED: each process writes
-  only the array chunks it addressably owns (replica 0 of each unique shard)
-  into ``step_XXXXXXXX.tmp/shard_<pid>/<tree>/...`` plus a per-process
-  ``index.json`` recording global shapes and chunk offsets; a barrier
-  precedes the process-0 publish (rename + manifest), so a crash on ANY
-  process before the barrier leaves the previous checkpoint fully intact.
-  ``save_tree`` (the single-process path) refuses leaves that are not fully
-  addressable -- ``jax.device_get`` on those would gather garbage.
+* **Content-addressed (layout v3, the default)**: leaves/chunks are hashed
+  (blake2b over dtype + shape + bytes) and written once into a shared
+  ``objects/`` pool (``repro.checkpoint.store``); the step directory is a
+  small ``objects.json`` manifest mapping leaf paths to digests, so
+  consecutive saves rewrite only leaves whose content changed (optimizer
+  hyper-state, frozen embeddings and the V-cycle ``params_before_*`` stashes
+  dedup to ~zero bytes), and GC is manifest-driven refcounting.  Dedup is
+  measurable: ``last_save_stats`` reports bytes written vs reused per save.
+  ``dedup=False`` writes the v2 whole-file layout; v1/v2 directories stay
+  readable either way.
+* **Sharded layout**: in multi-process runs (``jax.process_count() > 1``)
+  saves are COORDINATED: each process writes only the array chunks it
+  addressably owns (replica 0 of each unique shard) -- as pool objects (v3)
+  or ``shard_<pid>/`` chunk files (v2) -- and a barrier precedes the
+  process-0 publish, so a crash on ANY process before the barrier leaves the
+  previous checkpoint fully intact.  ``save_tree`` (the single-process path)
+  refuses leaves that are not fully addressable.
+* **Per-host LOCAL dirs (no shared filesystem)**: ``local=True`` makes the
+  manager treat ``directory`` as THIS process's private root.  Coordinated
+  saves then exchange *digests* (not bytes) through the jax coordination
+  service: every process pools its own chunks locally, process 0 merges the
+  per-process manifests, and every process publishes the merged manifest +
+  ``manifest.json`` into its own dir (each surviving host is
+  self-describing).  On restore, missing objects are gathered from whichever
+  peer holds them (coordination-service KV transfer), or read from
+  ``peer_dirs`` pools directly (e.g. the process-0 dir of a previous run)
+  when restoring with fewer processes.  See ``checkpoint/README.md``.
 * **Elastic restore**: checkpoints store *logical* (unsharded) arrays --
-  whole-leaf files and shard chunks reassemble to the same logical value --
-  so a checkpoint written under mesh A (and any process count) restores onto
-  mesh B (and any other process count) by passing target ``shardings``;
-  re-sharding happens in ``jax.device_put`` / ``make_array_from_callback``.
+  whole-leaf files, chunk files and pool objects reassemble to the same
+  logical value -- so a checkpoint written under mesh A (and any process
+  count) restores onto mesh B (and any other process count) by passing target
+  ``shardings``; re-sharding happens in ``jax.device_put`` /
+  ``make_array_from_callback``.
 * **Async**: ``save(..., blocking=False)`` snapshots to host memory
   synchronously (cheap) and writes files on a background thread, overlapping
   I/O with the next training steps.  Coordinated multi-process saves are
   always synchronous: the publish barrier must not run collectives/RPCs on a
   background thread while the training loop is mid-collective.
-* **V-cycle aware**: arbitrary JSON metadata rides along in the manifest.
-  ``launch/train.py`` stores the full ``VCycleState`` addressing -- phase,
-  level, segment index, step-within-segment, global step, cumulative FLOPs,
-  the FLOPs-indexed history and which ``params_before`` stashes are present
-  (saved as extra ``params_before_<level>`` trees) -- so the launcher resumes
-  mid-V-cycle, including mid-upward-sweep, and replays the pending level
-  transition deterministically.
-* **Collision-free leaf names**: leaf paths are percent-encoded into file
-  names (v2 layout, flagged by a ``leafenc.json`` marker); a path component
-  containing a literal ``__`` (e.g. a ``w__gate`` leaf) round-trips exactly.
-  Pre-v2 directories (no marker; ``/`` encoded as ``__``) are still readable.
+* **V-cycle aware**: arbitrary JSON metadata rides along in the manifest
+  (``launch/train.py`` stores the full ``VCycleState`` addressing).
+* **Collision-free leaf names**: v2+ layouts percent-encode leaf paths (v3
+  keeps them only inside JSON); a path component containing a literal ``__``
+  round-trips exactly.  Pre-v2 directories (no marker; ``/`` encoded as
+  ``__``) are still readable.
 * **keep_last**: old steps are garbage-collected after a successful save; the
   directory the manifest currently references is never collected, whatever
-  its step number.
+  its step number; pool objects are reclaimed exactly when no kept step
+  manifest references their digest (so a crash between object write and
+  publish strands orphans that the next successful save's GC sweeps up).
 """
 from __future__ import annotations
 
@@ -47,11 +62,14 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 from urllib.parse import quote, unquote
 
 import jax
 import numpy as np
+
+from repro.checkpoint import store as store_lib
+from repro.checkpoint.store import ObjectStore
 
 # v2 layout marker written into every tree dir: leaf paths are percent-encoded
 # ("/" -> "%2F", "%" -> "%25"), which is injective -- unlike the legacy
@@ -59,8 +77,14 @@ import numpy as np
 _LAYOUT_MARKER = "leafenc.json"
 _LAYOUT_VERSION = 2
 # per-process chunk index written into every shard_<pid>/ dir of a
-# coordinated (multi-process) save
+# coordinated (multi-process) v2 save
 _SHARD_INDEX = "index.json"
+
+# per-process instance counter: scopes coordination-service keys/barriers so
+# concurrent managers never collide.  Multi-process runs must construct their
+# CheckpointManagers in the same order on every process (they run the same
+# program), which keeps the scope names aligned across ranks.
+_MANAGER_COUNT = 0
 
 
 def _flatten(tree, prefix=""):
@@ -95,7 +119,7 @@ def _host_leaf(x) -> np.ndarray:
     ``jax.device_get`` on it either raises or (for some layouts) silently
     returns only the local portion -- either way the single-process save path
     must not be fed one.  Multi-process runs go through the coordinated
-    chunked writer (``CheckpointManager._save_coordinated``) instead.
+    chunked writer instead.
     """
     if getattr(x, "is_fully_addressable", True) is False:
         raise ValueError(
@@ -107,7 +131,7 @@ def _host_leaf(x) -> np.ndarray:
 
 
 def save_tree(path: str, tree) -> None:
-    """Single-process whole-leaf layout (one ``.npy`` per leaf path)."""
+    """Whole-leaf v2 layout (one ``.npy`` per leaf path), single-process."""
     os.makedirs(path, exist_ok=True)
     flat = _flatten(jax.tree.map(_host_leaf, tree))
     for k, v in flat.items():
@@ -118,7 +142,7 @@ def save_tree(path: str, tree) -> None:
 
 
 def _write_tree_chunks(tree_dir: str, tree) -> Dict[str, Any]:
-    """One process's share of a coordinated save: write the chunks this
+    """One process's share of a coordinated v2 save: write the chunks this
     process owns (replica 0 of each unique shard, so every unique piece of
     data is written exactly once globally) and return the index entries.
 
@@ -153,14 +177,23 @@ def _write_tree_chunks(tree_dir: str, tree) -> Dict[str, Any]:
     return index
 
 
-def _read_leaves(path: str) -> Dict[str, np.ndarray]:
+def _read_leaves(path: str, pools: Optional[List[ObjectStore]] = None
+                 ) -> Dict[str, np.ndarray]:
     """All leaves of one tree dir as logical host arrays.
 
-    Understands every on-disk generation: whole-leaf files in ``path`` (v2
-    percent-encoded and the legacy ``__`` scheme) AND coordinated-save chunk
-    files in sibling ``shard_<pid>/`` dirs, which are reassembled into full
-    logical arrays regardless of how many processes wrote them.
+    Understands every on-disk generation: v3 step manifests (digests resolved
+    through ``pools``, defaulting to the checkpoint root's own ``objects/``
+    pool), whole-leaf files in ``path`` (v2 percent-encoded and the legacy
+    ``__`` scheme) AND coordinated-save v2 chunk files in sibling
+    ``shard_<pid>/`` dirs -- all reassembled into full logical arrays
+    regardless of how many processes wrote them.
     """
+    step_dir, tree_key = os.path.split(os.path.normpath(path))
+    trees = store_lib.read_step_manifest(step_dir) if step_dir else None
+    if trees is not None:
+        if pools is None:
+            pools = [ObjectStore(os.path.dirname(step_dir))]
+        return store_lib.assemble_tree(trees.get(tree_key, {}), pools)
     flat: Dict[str, np.ndarray] = {}
     if os.path.isdir(path):
         if os.path.exists(os.path.join(path, _LAYOUT_MARKER)):
@@ -171,7 +204,6 @@ def _read_leaves(path: str) -> Dict[str, np.ndarray]:
             if fn.endswith(".npy"):
                 flat[decode(fn[:-4])] = np.load(os.path.join(path, fn),
                                                 allow_pickle=False)
-    step_dir, tree_key = os.path.split(os.path.normpath(path))
     for sd in sorted(glob.glob(os.path.join(step_dir, "shard_*"))):
         idx_path = os.path.join(sd, _SHARD_INDEX)
         if not os.path.exists(idx_path):
@@ -194,8 +226,13 @@ def _put(x, like, sharding):
     """Land one restored logical leaf, casting to the like-leaf dtype.  When
     the target sharding spans processes, ``device_put`` of host data is
     impossible -- build the global array from addressable pieces instead."""
-    host = np.asarray(x).astype(
-        like.dtype if hasattr(like, "dtype") else x.dtype)
+    host = np.asarray(x)
+    if (host.dtype.kind == "V" and hasattr(like, "dtype")
+            and np.dtype(like.dtype).itemsize == host.dtype.itemsize):
+        # np.save round-trips ml_dtypes leaves (bfloat16) as raw void bytes;
+        # the like-tree knows the true dtype, so view them back
+        host = host.view(like.dtype)
+    host = host.astype(like.dtype if hasattr(like, "dtype") else host.dtype)
     if sharding is None:
         return jax.device_put(host)
     if getattr(sharding, "is_fully_addressable", True):
@@ -204,34 +241,61 @@ def _put(x, like, sharding):
                                         lambda idx: host[idx])
 
 
-def restore_tree(path: str, like, shardings=None):
-    tree = _unflatten_into(_read_leaves(path), like)
+def _land_tree(flat: Dict[str, np.ndarray], like, shardings=None):
+    """Unflatten restored logical leaves into ``like``'s structure and land
+    them on devices.  With ``shardings``, this is the elastic re-shard:
+    checkpoints hold logical (unsharded) arrays, so a save from mesh A (any
+    process count) lands on mesh B here."""
+    tree = _unflatten_into(flat, like)
     if shardings is not None:
-        # elastic re-shard: checkpoints hold logical (unsharded) arrays, so a
-        # save from mesh A (any process count) lands on mesh B here
         return jax.tree.map(_put, tree, like, shardings)
     return jax.tree.map(lambda x, l: _put(x, l, None), tree, like)
 
 
-class CheckpointManager:
-    """Atomic, mesh- and process-count-elastic checkpoint store.
+def restore_tree(path: str, like, shardings=None,
+                 pools: Optional[List[ObjectStore]] = None):
+    return _land_tree(_read_leaves(path, pools=pools), like, shardings)
 
-    Single-process: whole-leaf files, optional async writes.  Multi-process
+
+class CheckpointManager:
+    """Atomic, mesh- and process-count-elastic, content-addressed checkpoints.
+
+    Single-process: pool objects + a step manifest (v3; ``dedup=False`` falls
+    back to v2 whole-leaf files), optional async writes.  Multi-process
     (``jax.process_count() > 1``): every process participates in ``save`` --
     each writes only its addressable shard chunks, all meet at a barrier, and
-    ONLY process 0 publishes (rename + manifest + GC), so the manifest flips
-    exactly once and a crash anywhere before the barrier leaves the previous
-    checkpoint referenced and intact.  ``restore`` reassembles logical arrays
-    from whichever layout was written, onto whatever mesh and process count
-    the restoring run uses.
+    ONLY process 0 publishes (rename + manifest + GC) -- unless ``local=True``
+    (no shared filesystem), where every process pools chunks in its OWN
+    ``directory``, manifests travel through the coordination-service KV store,
+    and every process publishes locally.  ``restore`` reassembles logical
+    arrays from whichever layout was written, onto whatever mesh and process
+    count the restoring run uses, gathering missing pool objects from peers
+    (coordination KV) or from ``peer_dirs`` (directly-readable foreign pools,
+    e.g. another host's recovered local dir).
     """
 
-    def __init__(self, directory: str, keep_last: int = 3):
+    def __init__(self, directory: str, keep_last: int = 3, *,
+                 dedup: bool = True, local: bool = False, peer_dirs=()):
+        global _MANAGER_COUNT
+        _MANAGER_COUNT += 1
+        self._scope = f"ckptmgr{_MANAGER_COUNT}"
         self.dir = directory
         self.keep_last = keep_last
+        self.local = bool(local)
+        self.dedup = bool(dedup) or self.local  # local mode is v3-only
+        self.store = ObjectStore(directory)
+        self.peer_pools = [ObjectStore(d) for d in peer_dirs]
+        #: per-save dedup accounting of THIS process's most recent v3 save:
+        #: {bytes,objects}_{written,reused} (reused = content-addressed hits)
+        self.last_save_stats: Dict[str, int] = {}
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._save_seq = 0  # barrier-name uniquifier (same sequence on every process)
+        self._kv_seq = 0  # coordination-KV key uniquifier (ditto)
+        self._remote_trees: Dict[str, Any] = {}  # step dir -> KV-broadcast manifest
+
+    def _pools(self) -> List[ObjectStore]:
+        return [self.store, *self.peer_pools]
 
     # ---- manifest ----------------------------------------------------
     @property
@@ -239,6 +303,18 @@ class CheckpointManager:
         return os.path.join(self.dir, "manifest.json")
 
     def latest(self) -> Optional[Dict[str, Any]]:
+        """Newest valid checkpoint's manifest record, or None.
+
+        In local-dir multi-process runs this is COORDINATED (process 0 reads
+        its dir and broadcasts over the coordination KV, so every process --
+        including ones with a fresh/empty local dir -- agrees on the same
+        answer); call it symmetrically on every process, like ``save``.
+        """
+        if self.local and jax.process_count() > 1:
+            return self._latest_coordinated()
+        return self._latest_uncoordinated()
+
+    def _latest_uncoordinated(self) -> Optional[Dict[str, Any]]:
         if not os.path.exists(self.manifest_path):
             return None
         with open(self.manifest_path) as f:
@@ -247,6 +323,58 @@ class CheckpointManager:
         if not os.path.isdir(step_dir):  # torn manifest: fall back to scan
             return self._scan_fallback()
         return m
+
+    def _latest_coordinated(self) -> Optional[Dict[str, Any]]:
+        """Newest checkpoint across EVERY process's local dir.
+
+        All ranks exchange their local candidate and deterministically pick
+        the max (step, dir) -- so the answer survives any subset of local
+        dirs being lost or fresh (a rank 0 restarted on an empty disk must
+        not make the whole job silently forget a checkpoint that a surviving
+        host still publishes).  Whether the winning checkpoint's OBJECTS are
+        all still held somewhere is ``_gather_objects``' job, which fails
+        loudly rather than restarting from scratch.
+        """
+        from repro.distributed import (barrier, kv_allgather, kv_delete,
+                                       kv_fetch, kv_put)
+
+        pid, n = jax.process_index(), jax.process_count()
+        self._kv_seq += 1
+        tag = f"{self._scope}-latest-{self._kv_seq}"
+        # round 1: tiny candidates only -- the full step manifest is shipped
+        # by the elected winner alone (N-1 broadcast copies would be dead
+        # weight in coordinator RAM)
+        m = self._latest_uncoordinated()
+        cands = [json.loads(p) for p in kv_allgather(
+            f"{tag}-cand", json.dumps(m).encode())]
+        ranked = [(c["step"], c["dir"], r) for r, c in enumerate(cands)
+                  if c is not None]
+        if not ranked:
+            return None
+        step, d, winner = max(ranked)
+        best = cands[winner]
+        # round 2: the winner ships its manifest; everyone else fetches
+        if pid == winner:
+            trees = store_lib.read_step_manifest(os.path.join(self.dir, d))
+            kv_put(f"{tag}-best", json.dumps(trees).encode())
+        else:
+            trees = json.loads(kv_fetch(f"{tag}-best"))
+        barrier(f"{tag}-done")
+        if pid == 0:
+            kv_delete(f"{tag}-best")
+        if trees is not None:
+            # processes without the step dir on local disk (fresh dir, fewer
+            # or more hosts than at save time) restore from this broadcast
+            self._remote_trees[d] = trees
+        return best
+
+    def _step_trees(self, m: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+        """v3 manifest of the step ``m`` references (disk, then KV broadcast
+        cache); None when the step was written in a v1/v2 layout."""
+        trees = store_lib.read_step_manifest(os.path.join(self.dir, m["dir"]))
+        if trees is None:
+            trees = self._remote_trees.get(m["dir"])
+        return trees
 
     def _step_dirs(self) -> list:
         """Published step dirs, oldest-publish first.
@@ -288,28 +416,31 @@ class CheckpointManager:
         """
         self.wait()
         if jax.process_count() > 1:
-            self._save_coordinated(step, state, meta)
+            if self.local:
+                self._save_local_coordinated(step, state, meta)
+            else:
+                self._save_coordinated(step, state, meta)
             return
         host_state = jax.tree.map(_host_leaf, state)  # synchronous snapshot
 
         def _write():
             name = f"step_{step:08d}"
             tmp = os.path.join(self.dir, name + ".tmp")
-            final = os.path.join(self.dir, name)
             if os.path.isdir(tmp):
                 shutil.rmtree(tmp)
             os.makedirs(tmp)
-            for key, tree in host_state.items():
-                save_tree(os.path.join(tmp, key), tree)
+            if self.dedup:
+                before = self.store.stats()
+                trees = {key: self._pool_whole_tree(tree)
+                         for key, tree in host_state.items()}
+                store_lib.write_step_manifest(tmp, trees)
+                self._set_save_stats(before)
+            else:
+                for key, tree in host_state.items():
+                    save_tree(os.path.join(tmp, key), tree)
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta or {}, f)
-            if os.path.isdir(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)  # atomic publish
-            with open(self.manifest_path + ".tmp", "w") as f:
-                json.dump({"dir": name, "step": step, "meta": meta or {}}, f)
-            os.replace(self.manifest_path + ".tmp", self.manifest_path)
-            self._gc()
+            self._publish(name, tmp, step, meta)
 
         if blocking:
             _write()
@@ -317,19 +448,80 @@ class CheckpointManager:
             self._thread = threading.Thread(target=_write, daemon=True)
             self._thread.start()
 
+    def _set_save_stats(self, before: Dict[str, int]) -> None:
+        after = self.store.stats()
+        self.last_save_stats = {k: after[k] - before[k] for k in after}
+
+    def _pool_whole_tree(self, tree) -> Dict[str, Any]:
+        """Pool every leaf of one host tree whole; returns manifest entries."""
+        entries: Dict[str, Any] = {}
+        for k, v in _flatten(tree).items():
+            v = store_lib.as_host_leaf(v)
+            d = store_lib.leaf_digest(v)
+            self.store.put(d, v)
+            entries[k] = store_lib.whole_leaf_entry(d, v)
+        return entries
+
+    def _pool_chunk_entries(self, tree) -> Dict[str, Any]:
+        """One process's share of a coordinated v3 save: pool the chunks this
+        process addressably owns (replica 0 of each unique shard) and return
+        the partial manifest entries (merged across processes by the
+        publisher).  Fully-addressable leaves are identical on every process
+        by construction -- process 0 pools them whole."""
+        entries: Dict[str, Any] = {}
+        for k, v in _flatten(tree).items():
+            if getattr(v, "is_fully_addressable", True) is False:
+                chunks = []
+                dtype = None
+                for sh in v.addressable_shards:
+                    if sh.replica_id != 0:
+                        continue
+                    data = store_lib.as_host_leaf(sh.data)
+                    dtype = str(data.dtype)
+                    dig = store_lib.leaf_digest(data)
+                    self.store.put(dig, data)
+                    start = [sl.indices(dim)[0]
+                             for sl, dim in zip(sh.index, v.shape)]
+                    chunks.append({"digest": dig, "start": start,
+                                   "shape": list(data.shape)})
+                if chunks:
+                    entries[k] = {"shape": list(v.shape), "dtype": dtype,
+                                  "chunks": chunks}
+            elif jax.process_index() == 0:
+                data = store_lib.as_host_leaf(_host_leaf(v))
+                dig = store_lib.leaf_digest(data)
+                self.store.put(dig, data)
+                entries[k] = store_lib.whole_leaf_entry(dig, data)
+        return entries
+
+    def _publish(self, name: str, tmp: str, step: int,
+                 meta: Optional[Dict]) -> None:
+        """Atomic publish: rename the staged step dir, flip ``manifest.json``,
+        GC.  Everything before this point is crash-safe by construction (a
+        torn save leaves only a .tmp dir and unreferenced pool objects)."""
+        final = os.path.join(self.dir, name)
+        if os.path.isdir(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        with open(self.manifest_path + ".tmp", "w") as f:
+            json.dump({"dir": name, "step": step, "meta": meta or {}}, f)
+        os.replace(self.manifest_path + ".tmp", self.manifest_path)
+        self._gc()
+
     def _save_coordinated(self, step: int, state: Dict[str, Any],
                           meta: Optional[Dict]) -> None:
-        """Multi-process save: per-process shard chunks, barrier, then a
-        process-0-only publish.  Assumes the checkpoint directory is shared
-        (the standard multi-host arrangement; on this container: localhost)."""
+        """Multi-process save into a SHARED checkpoint directory: per-process
+        shard chunks, barrier, then a process-0-only publish."""
+        if self.dedup:
+            self._save_coordinated_v3(step, state, meta)
+            return
         from repro.distributed import barrier
 
         pid = jax.process_index()
         self._save_seq += 1
-        tag = f"ckpt-{os.path.basename(self.dir)}-{self._save_seq}"
+        tag = f"{self._scope}-{self._save_seq}"
         name = f"step_{step:08d}"
         tmp = os.path.join(self.dir, name + ".tmp")
-        final = os.path.join(self.dir, name)
         if pid == 0:
             if os.path.isdir(tmp):
                 shutil.rmtree(tmp)
@@ -348,15 +540,85 @@ class CheckpointManager:
         if pid == 0:
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta or {}, f)
-            if os.path.isdir(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)  # atomic publish
-            with open(self.manifest_path + ".tmp", "w") as f:
-                json.dump({"dir": name, "step": step, "meta": meta or {}}, f)
-            os.replace(self.manifest_path + ".tmp", self.manifest_path)
-            self._gc()
+            self._publish(name, tmp, step, meta)
         # nobody returns (and e.g. restores, or exits on a preemption drain)
         # until the manifest references the new step
+        barrier(f"{tag}-published")
+
+    def _save_coordinated_v3(self, step: int, state: Dict[str, Any],
+                             meta: Optional[Dict]) -> None:
+        """Coordinated save through the shared object pool: each process pools
+        its addressable chunks (content-addressed, so unchanged chunks cost no
+        I/O) and stages a partial manifest; process 0 merges and publishes."""
+        from repro.distributed import barrier
+
+        pid = jax.process_index()
+        self._save_seq += 1
+        tag = f"{self._scope}-{self._save_seq}"
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        if pid == 0:
+            if os.path.isdir(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+        barrier(f"{tag}-prep")
+        before = self.store.stats()
+        index = {key: self._pool_chunk_entries(tree)
+                 for key, tree in state.items()}
+        self._set_save_stats(before)
+        with open(os.path.join(tmp, f"index_{pid:03d}.json"), "w") as f:
+            json.dump(index, f)
+        # all pool objects + partial manifests are durable before anyone
+        # publishes; a crash before this point strands only orphan objects
+        # (reclaimed by the next successful save's refcount GC)
+        barrier(f"{tag}-written")
+        if pid == 0:
+            parts = []
+            for fn in sorted(os.listdir(tmp)):
+                if fn.startswith("index_") and fn.endswith(".json"):
+                    with open(os.path.join(tmp, fn)) as f:
+                        parts.append(json.load(f))
+                    os.remove(os.path.join(tmp, fn))
+            trees = {key: store_lib.merge_tree_entries(
+                         [p.get(key, {}) for p in parts]) for key in state}
+            store_lib.write_step_manifest(tmp, trees)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta or {}, f)
+            self._publish(name, tmp, step, meta)
+        barrier(f"{tag}-published")
+
+    def _save_local_coordinated(self, step: int, state: Dict[str, Any],
+                                meta: Optional[Dict]) -> None:
+        """Coordinated save WITHOUT a shared filesystem: chunks go to this
+        process's own pool, only digests cross the network.  Every process
+        publishes the merged manifest into its own dir, so any surviving host
+        is self-describing and per-host refcount GC stays local."""
+        from repro.distributed import barrier, kv_allgather
+
+        self._kv_seq += 1
+        tag = f"{self._scope}-save-{self._kv_seq}"
+        name = f"step_{step:08d}"
+        before = self.store.stats()
+        index = {key: self._pool_chunk_entries(tree)
+                 for key, tree in state.items()}
+        self._set_save_stats(before)
+        # each rank puts its index only after its objects are durable, so the
+        # allgather doubles as the write barrier; the merge is deterministic
+        # (rank-ordered parts), so every rank computes the identical manifest
+        parts = [json.loads(p) for p in kv_allgather(
+            f"{tag}-idx", json.dumps(index).encode())]
+        trees = {key: store_lib.merge_tree_entries(
+                     [p.get(key, {}) for p in parts]) for key in state}
+        tmp = os.path.join(self.dir, name + ".tmp")
+        if os.path.isdir(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        store_lib.write_step_manifest(tmp, trees)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta or {}, f)
+        self._publish(name, tmp, step, meta)
+        # nobody returns (and e.g. exits on a preemption drain) until every
+        # host's local dir references the new step
         barrier(f"{tag}-published")
 
     def wait(self) -> None:
@@ -386,16 +648,104 @@ class CheckpointManager:
         for d in os.listdir(self.dir):
             if d.endswith(".tmp") and os.path.isdir(os.path.join(self.dir, d)):
                 shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+        # manifest-driven refcount GC of the object pool: an object is live
+        # iff some kept step manifest references its digest.  Orphans from a
+        # crash between object write and publish are unreferenced by
+        # construction and get reclaimed here, on the next successful save.
+        live = set()
+        for d in self._step_dirs():
+            trees = store_lib.read_step_manifest(os.path.join(self.dir, d))
+            if trees is not None:
+                live.update(store_lib.manifest_digests(trees))
+        for dig in list(self.store.digests()):
+            if dig not in live:
+                self.store.delete(dig)
 
     # ---- restore --------------------------------------------------------
     def restore(self, like_state: Dict[str, Any], shardings: Optional[Dict] = None):
-        """Returns (state, meta) from the newest valid checkpoint, or (None, None)."""
+        """Returns (state, meta) from the newest valid checkpoint, or (None, None).
+
+        Multi-process local-dir runs gather missing pool objects from peers
+        first (coordination-KV transfer; see ``checkpoint/README.md``) --
+        like ``save``, call symmetrically on every process.
+        """
         m = self.latest()
         if m is None:
             return None, None
+        trees = self._step_trees(m)
+        if trees is not None and self.local and jax.process_count() > 1:
+            self._gather_objects(trees)
         base = os.path.join(self.dir, m["dir"])
         out = {}
         for key, like in like_state.items():
             sh = shardings.get(key) if shardings else None
-            out[key] = restore_tree(os.path.join(base, key), like, sh)
+            if trees is not None:
+                # the manifest may have arrived over the KV broadcast (local
+                # dirs), so resolve digests directly rather than via a path
+                out[key] = _land_tree(
+                    store_lib.assemble_tree(trees.get(key, {}), self._pools()),
+                    like, sh)
+            else:
+                out[key] = restore_tree(os.path.join(base, key), like, sh,
+                                        pools=self._pools())
         return out, m.get("meta", {})
+
+    def _gather_objects(self, trees: Dict[str, Any]) -> None:
+        """No-shared-FS restore protocol: fetch every manifest digest this
+        process is missing from whichever peer holds it.
+
+        Rounds (all over the coordination-service KV store, tiny JSON +
+        object bytes): (1) every process publishes its have/want lists for
+        the manifest's digest set; (2) each wanted digest is served by the
+        LOWEST rank holding it (deterministic single writer); (3) wanters
+        fetch and cache the bytes into their own pool (so the next save
+        dedups against them).  Raises if a digest is held by no process.
+        """
+        from repro.distributed import (barrier, kv_allgather, kv_delete,
+                                       kv_fetch, kv_put)
+
+        pid, n = jax.process_index(), jax.process_count()
+        self._kv_seq += 1
+        tag = f"{self._scope}-gather-{self._kv_seq}"
+        pools = self._pools()
+        needed = sorted(set(store_lib.manifest_digests(trees)))
+        have = [d for d in needed if any(p.has(d) for p in pools)]
+        want = sorted(set(needed) - set(have))
+        lists = [json.loads(p) for p in kv_allgather(
+            f"{tag}-lists", json.dumps({"have": have, "want": want}).encode())]
+        haves = {r: set(lists[r]["have"]) for r in range(n)}
+        wanted = sorted(set().union(*[set(lists[r]["want"])
+                                      for r in range(n)]))
+        for d in wanted:
+            owner = next((r for r in range(n) if d in haves[r]), None)
+            if owner is None:
+                raise FileNotFoundError(
+                    f"checkpoint object {d} is referenced by the manifest "
+                    f"but held by no process; the checkpoint is incomplete "
+                    f"(a writer host's local dir is gone?)")
+            if owner == pid:
+                payload = next(p.get_bytes(d) for p in pools if p.has(d))
+                kv_put(f"{tag}-obj-{d}", payload)
+        # the manifest knows each digest's true dtype (npy round-trips
+        # ml_dtypes as raw void bytes, which would re-hash differently)
+        dtype_of = {ch["digest"]: rec.get("dtype")
+                    for entries in trees.values()
+                    for rec in entries.values() for ch in rec["chunks"]}
+        for d in want:
+            payload = kv_fetch(f"{tag}-obj-{d}")
+            # verify BEFORE caching: a content-addressed pool that trusts
+            # transferred bytes makes a corrupt transfer sticky -- every
+            # later save would dedup against the poisoned object
+            got = store_lib.payload_digest(payload, dtype_of.get(d))
+            if got != d:
+                raise IOError(
+                    f"checkpoint object {d} arrived corrupt from its peer "
+                    f"(payload hashes to {got}); refusing to cache it")
+            self.store.put_bytes(d, payload)
+        barrier(f"{tag}-done")
+        if pid == 0:
+            # the object payloads are the big entries -- a full elastic
+            # restore parks the whole checkpoint in coordinator RAM until
+            # this sweep reclaims it
+            for d in wanted:
+                kv_delete(f"{tag}-obj-{d}")

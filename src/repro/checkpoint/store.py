@@ -1,0 +1,264 @@
+"""Content-addressed checkpoint object store (layout v3).
+
+Orbax-style incremental storage: every leaf (or shard chunk, in coordinated
+multi-process saves) is serialized once into a shared ``objects/`` pool keyed
+by a blake2b digest of its dtype + shape + raw bytes; a step directory is then
+just a small JSON manifest (``objects.json``) mapping ``tree -> leaf path ->
+{shape, dtype, chunks: [{digest, start, shape}]}``.  Consecutive saves
+therefore rewrite only the leaves whose *content* changed -- optimizer
+hyper-state, frozen embeddings and the V-cycle ``params_before_*`` stashes
+dedup to ~zero bytes after the first save -- and garbage collection becomes
+manifest-driven refcounting (an object is live iff some published step
+manifest references its digest) instead of directory deletion.
+
+The pool is crash-safe by construction:
+
+* ``put`` writes through a unique temp file and ``os.replace``s into place --
+  concurrent writers of the same digest converge on identical bytes, and a
+  torn write never leaves a partial object under its final name;
+* objects are written *before* the step manifest publishes, so a crash
+  between write and publish strands only unreferenced (orphan) objects,
+  which the next successful save's refcount GC reclaims;
+* objects are immutable once written (content-addressed), so readers never
+  race writers.
+
+``repro.checkpoint.manager`` owns the orchestration (atomic step-dir publish,
+barriers, the no-shared-FS gather protocol); this module is pure local I/O.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import os
+from typing import Any, Dict, Iterable, Iterator, List, Optional
+
+import numpy as np
+
+# per-step manifest file marking a v3 (content-addressed) step directory
+OBJECTS_JSON = "objects.json"
+V3_VERSION = 3
+
+
+def as_host_leaf(x) -> np.ndarray:
+    """C-contiguous host view of one leaf.  NOT ``np.ascontiguousarray``,
+    which silently promotes 0-d scalars to 1-d and would corrupt their
+    checkpointed shape."""
+    arr = np.asarray(x)
+    return arr if arr.flags.c_contiguous else np.ascontiguousarray(arr)
+
+
+def leaf_digest(arr: np.ndarray) -> str:
+    """Content digest of one host array: blake2b over (dtype, shape, bytes).
+
+    ``str(dtype)`` (not ``dtype.str``) so ml_dtypes extension types hash
+    distinctly -- ``bfloat16`` and any other 2-byte void type must not
+    collide.
+    """
+    arr = as_host_leaf(arr)
+    h = hashlib.blake2b(digest_size=20)
+    h.update(str(arr.dtype).encode())
+    h.update(repr(tuple(arr.shape)).encode())
+    h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def _decode_npy(payload: bytes) -> np.ndarray:
+    return np.load(io.BytesIO(payload), allow_pickle=False)
+
+
+def payload_digest(payload: bytes, dtype: Optional[str] = None) -> str:
+    """Digest of a serialized pool object (``dtype`` = the manifest's true
+    dtype name, needed because npy stores ml_dtypes as raw void bytes).
+
+    Used to verify network transfers before caching: a content-addressed
+    store that trusts fetched bytes would make a corrupt transfer STICKY --
+    every later save dedups against the poisoned object."""
+    return leaf_digest(_restore_dtype(_decode_npy(payload), dtype))
+
+
+def _restore_dtype(arr: np.ndarray, dtype_name: Optional[str]) -> np.ndarray:
+    """Undo numpy's lossy round-trip of extension dtypes.
+
+    ``np.save`` stores ml_dtypes leaves (e.g. bfloat16) as raw void bytes
+    (``|V2``); the manifest carries the true dtype name, so view the bytes
+    back.  Plain dtypes pass through untouched.
+    """
+    if dtype_name is None or str(arr.dtype) == dtype_name:
+        return arr
+    if arr.dtype.kind == "V":
+        return arr.view(np.dtype(dtype_name))
+    return arr
+
+
+class ObjectStore:
+    """One directory's content-addressed pool (``<root>/objects/<dd>/<digest>.npy``).
+
+    Tracks ``bytes_written`` / ``objects_written`` / ``bytes_reused`` /
+    ``objects_reused`` so dedup is *measurable*, not assumed
+    (tests/test_ckpt_store.py asserts on these).
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        self.pool = os.path.join(root, "objects")
+        self.bytes_written = 0
+        self.objects_written = 0
+        self.bytes_reused = 0
+        self.objects_reused = 0
+
+    def path(self, digest: str) -> str:
+        return os.path.join(self.pool, digest[:2], digest + ".npy")
+
+    def has(self, digest: str) -> bool:
+        return os.path.exists(self.path(digest))
+
+    def put(self, digest: str, arr: np.ndarray) -> int:
+        """Write ``arr`` under ``digest`` unless already present.
+
+        Returns bytes actually written (0 on a dedup hit).  The hit check
+        runs BEFORE serialization, so unchanged leaves -- the store's whole
+        reason to exist -- cost neither the npy encode nor the bytes copy.
+        Atomic: a unique temp name + ``os.replace``, so concurrent
+        same-digest writers (shared pools under coordinated saves) and
+        crashes are both safe.
+        """
+        if self.has(digest):
+            self.objects_reused += 1
+            self.bytes_reused += int(arr.nbytes)
+            return 0
+        buf = io.BytesIO()
+        np.save(buf, as_host_leaf(arr), allow_pickle=False)
+        return self.put_bytes(digest, buf.getvalue())
+
+    def put_bytes(self, digest: str, payload: bytes) -> int:
+        p = self.path(digest)
+        if os.path.exists(p):
+            self.objects_reused += 1
+            self.bytes_reused += len(payload)
+            return 0
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        tmp = f"{p}.tmp.{os.getpid()}"
+        with open(tmp, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, p)
+        self.bytes_written += len(payload)
+        self.objects_written += 1
+        return len(payload)
+
+    def get_bytes(self, digest: str) -> bytes:
+        with open(self.path(digest), "rb") as f:
+            return f.read()
+
+    def get(self, digest: str, dtype: Optional[str] = None) -> np.ndarray:
+        return _restore_dtype(_decode_npy(self.get_bytes(digest)), dtype)
+
+    def delete(self, digest: str) -> None:
+        try:
+            os.remove(self.path(digest))
+        except OSError:
+            pass
+
+    def digests(self) -> Iterator[str]:
+        if not os.path.isdir(self.pool):
+            return
+        for sub in os.listdir(self.pool):
+            d = os.path.join(self.pool, sub)
+            if not os.path.isdir(d):
+                continue
+            for fn in os.listdir(d):
+                if fn.endswith(".npy"):
+                    yield fn[:-4]
+
+    def stats(self) -> Dict[str, int]:
+        return {"bytes_written": self.bytes_written,
+                "objects_written": self.objects_written,
+                "bytes_reused": self.bytes_reused,
+                "objects_reused": self.objects_reused}
+
+
+# ---------------------------------------------------------------------------
+# v3 step manifests
+
+
+def whole_leaf_entry(digest: str, arr: np.ndarray) -> Dict[str, Any]:
+    """Manifest record for an unsharded leaf: one chunk covering everything."""
+    return {"shape": list(arr.shape), "dtype": str(arr.dtype),
+            "chunks": [{"digest": digest, "start": [0] * arr.ndim,
+                        "shape": list(arr.shape)}]}
+
+
+def merge_tree_entries(parts: Iterable[Dict[str, Dict[str, Any]]]
+                       ) -> Dict[str, Dict[str, Any]]:
+    """Merge per-process partial manifests of ONE tree (coordinated saves):
+    chunk lists concatenate, global shape/dtype must agree."""
+    out: Dict[str, Dict[str, Any]] = {}
+    for part in parts:
+        for leaf, rec in part.items():
+            got = out.get(leaf)
+            if got is None:
+                out[leaf] = {"shape": rec["shape"], "dtype": rec["dtype"],
+                             "chunks": list(rec["chunks"])}
+            else:
+                if got["shape"] != rec["shape"] or got["dtype"] != rec["dtype"]:
+                    raise ValueError(
+                        f"coordinated save disagrees on leaf {leaf!r}: "
+                        f"{got['shape']}/{got['dtype']} vs "
+                        f"{rec['shape']}/{rec['dtype']}")
+                got["chunks"].extend(rec["chunks"])
+    return out
+
+
+def write_step_manifest(step_dir: str, trees: Dict[str, Dict[str, Any]]) -> None:
+    with open(os.path.join(step_dir, OBJECTS_JSON), "w") as f:
+        json.dump({"version": V3_VERSION, "trees": trees}, f)
+
+
+def read_step_manifest(step_dir: str) -> Optional[Dict[str, Dict[str, Any]]]:
+    """The ``trees`` map of a v3 step dir, or None for v1/v2 layouts."""
+    p = os.path.join(step_dir, OBJECTS_JSON)
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)["trees"]
+
+
+def manifest_digests(trees: Dict[str, Dict[str, Any]]) -> Iterator[str]:
+    for entries in trees.values():
+        for rec in entries.values():
+            for ch in rec["chunks"]:
+                yield ch["digest"]
+
+
+def fetch_object(digest: str, pools: List[ObjectStore],
+                 dtype: Optional[str] = None) -> np.ndarray:
+    """Resolve ``digest`` through an ordered pool list (own dir first, then
+    peer dirs / gathered caches)."""
+    for pool in pools:
+        if pool.has(digest):
+            return pool.get(digest, dtype)
+    raise FileNotFoundError(
+        f"checkpoint object {digest} not found in any pool "
+        f"({[p.pool for p in pools]}); the object pool and the step manifest "
+        "referencing it have diverged")
+
+
+def assemble_tree(entries: Dict[str, Dict[str, Any]],
+                  pools: List[ObjectStore]) -> Dict[str, np.ndarray]:
+    """Logical host arrays of one tree from its manifest entries + pools
+    (inverse of chunking, whatever mesh/process count wrote the chunks)."""
+    flat: Dict[str, np.ndarray] = {}
+    for leaf, rec in entries.items():
+        chunks = rec["chunks"]
+        first = fetch_object(chunks[0]["digest"], pools, rec.get("dtype"))
+        if len(chunks) == 1 and list(first.shape) == list(rec["shape"]):
+            flat[leaf] = first
+            continue
+        out = np.empty(tuple(rec["shape"]), dtype=first.dtype)
+        for ch in chunks:
+            data = fetch_object(ch["digest"], pools, rec.get("dtype"))
+            sl = tuple(slice(st, st + sz)
+                       for st, sz in zip(ch["start"], ch["shape"]))
+            out[sl] = data
+        flat[leaf] = out
+    return flat

@@ -297,10 +297,14 @@ class VCycleRunner:
                  batch_fn: Callable[[int], Dict[str, jax.Array]], *,
                  seed: int = 0, target_loss: Optional[float] = None,
                  final_steps: Optional[int] = None, verbose: bool = False,
-                 mesh=None):
+                 mesh=None, drain_flag=None):
         self.ml, self.tc, self.batch_fn = ml, tc, batch_fn
         self.seed, self.target_loss, self.verbose = seed, target_loss, verbose
         self.mesh = mesh
+        # a distributed.FusedDrainFlag: the preemption drain OR is computed
+        # INSIDE each level's compiled step (one extra tiny input + metrics
+        # scalar) instead of a dedicated per-step process_allgather
+        self.drain_flag = drain_flag if mesh is not None else None
         self.cfgs = [cfg]
         for _ in range(ml.n_levels - 1):
             self.cfgs.append(ops.coalesce_config(self.cfgs[-1], ml))
@@ -355,10 +359,16 @@ class VCycleRunner:
                 # metrics are explicitly replicated: the host loss fetch
                 # (float()) must work on every process of a multi-process mesh
                 rep = NamedSharding(self.mesh, PartitionSpec())
-                fn = jax.jit(step,
-                             in_shardings=(psh, osh, self.batch_shardings()),
-                             out_shardings=(psh, osh, rep),
-                             donate_argnums=(0, 1))
+                if self.drain_flag is not None:
+                    fn = self.drain_flag.wrap_step(
+                        step,
+                        in_shardings=(psh, osh, self.batch_shardings()),
+                        out_shardings=(psh, osh, rep))
+                else:
+                    fn = jax.jit(step,
+                                 in_shardings=(psh, osh, self.batch_shardings()),
+                                 out_shardings=(psh, osh, rep),
+                                 donate_argnums=(0, 1))
             self._step_fns[level] = fn
             self.n_compiles += 1
         return fn

@@ -72,6 +72,68 @@ def barrier(name: str) -> None:
     multihost_utils.sync_global_devices(name)
 
 
+def _require_client():
+    client = _coordination_client()
+    if client is None:
+        raise RuntimeError(
+            "the coordination-service KV store needs jax.distributed "
+            "(repro.launch.mesh.init_distributed) -- single-process runs "
+            "have no peers to exchange with")
+    return client
+
+
+def kv_put(key: str, payload: bytes) -> None:
+    """Publish bytes under ``key`` in the coordination-service KV store.
+
+    Keys must be unique per run (callers scope them with per-instance
+    sequence counters); values ride the same gRPC channel as barriers, so
+    keep them modest (the checkpoint gather moves one leaf chunk at a time).
+    """
+    _require_client().key_value_set_bytes(f"repro:{key}", payload)
+
+
+def kv_fetch(key: str, timeout_ms: int = _BARRIER_TIMEOUT_MS) -> bytes:
+    """Block until some process ``kv_put``s ``key``; returns its bytes."""
+    return _require_client().blocking_key_value_get_bytes(
+        f"repro:{key}", timeout_ms)
+
+
+def kv_delete(key: str) -> None:
+    """Best-effort delete of a KV entry.
+
+    The coordinator holds every key in RAM for the life of the job, so
+    producers MUST clean up once all consumers are provably past their
+    fetches (i.e. after a barrier) -- a days-long run checkpointing on a
+    cadence would otherwise grow coordinator memory without bound.  Failures
+    are swallowed: a leaked key is a leak, not a correctness problem.
+    """
+    try:
+        _require_client().key_value_delete(f"repro:{key}")
+    except Exception:
+        pass
+
+
+def kv_allgather(tag: str, payload: bytes,
+                 timeout_ms: int = _BARRIER_TIMEOUT_MS) -> list:
+    """Every process contributes ``payload`` under ``tag``; returns the list
+    of all processes' payloads, rank-ordered and identical everywhere.
+
+    Holds the exchange choreography in ONE place: put, fetch-all, barrier
+    (proving every consumer is past its fetches), then a rank-0 cleanup sweep
+    so the coordinator's RAM is reclaimed.  ``tag`` must be unique per
+    exchange (callers scope it with per-instance sequence counters), and the
+    call is a collective -- every process must reach it with the same tag.
+    """
+    pid, n = process_index(), process_count()
+    kv_put(f"{tag}-{pid}", payload)
+    out = [kv_fetch(f"{tag}-{r}", timeout_ms) for r in range(n)]
+    barrier(f"{tag}-ag")
+    if pid == 0:
+        for r in range(n):
+            kv_delete(f"{tag}-{r}")
+    return out
+
+
 def any_process_flag(flag: bool) -> bool:
     """Cross-process OR of a host-side flag (identity single-process).
 
@@ -152,6 +214,97 @@ def as_global_batch_fn(batch_fn, mesh: Optional[Any], rules=None):
     if mesh is None or process_count() == 1:
         return batch_fn
     return GlobalBatchFn(batch_fn, mesh, rules)
+
+
+class FusedDrainFlag:
+    """Preemption drain flag fused into the compiled train step.
+
+    The dedicated per-step ``process_allgather`` of the SIGTERM flag (a tiny
+    host-side gloo round-trip between every step) is replaced by one extra
+    input/output on the step itself: each process authors one int32 element
+    per device it owns in a mesh-shaped array (``device_flag``), the step
+    reduces it with ``jnp.max`` into a replicated ``metrics["drain"]`` scalar,
+    and the cross-process OR therefore rides the step's existing collective
+    schedule -- XLA fuses and overlaps it with the step's other reductions
+    instead of a separate synchronous RPC.
+
+    Wiring (see ``launch/train.py`` / ``core/vcycle.py``): the driver attaches
+    an instance to its ``PreemptionGuard``; every step feeds
+    ``device_flag()`` in and hands ``metrics["drain"]`` to ``observe``;
+    ``PreemptionGuard.should_stop`` then reads ``last()`` instead of
+    all-gathering.  Each element is single-authored by the process owning its
+    device, so every process computes the identical ``max`` at the identical
+    step -- a notice delivered to ANY ONE process still drains the whole job
+    at one agreed step boundary (pinned by tests/test_multiprocess.py).
+    """
+
+    def __init__(self, mesh, guard=None):
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        self.mesh = mesh
+        self.guard = guard  # anything with a host-side ``triggered`` bool
+        self.shape = tuple(np.shape(mesh.devices))
+        # fully partitioned over every mesh axis: one element per device,
+        # each authored only by the process that owns that device (a
+        # replicated spec would let processes disagree about replica values)
+        self.sharding = NamedSharding(mesh, PartitionSpec(*mesh.axis_names))
+        self._last = None
+
+    def device_flag(self) -> jax.Array:
+        """This step's flag input: my devices' elements carry MY flag."""
+        v = 1 if (self.guard is not None
+                  and getattr(self.guard, "triggered", False)) else 0
+
+        def shard(idx):
+            dims = [len(range(*sl.indices(dim)))
+                    for sl, dim in zip(idx, self.shape)]
+            return np.full(dims, v, np.int32)
+
+        return jax.make_array_from_callback(self.shape, self.sharding, shard)
+
+    @staticmethod
+    def reduce(flag: jax.Array) -> jax.Array:
+        """The in-step cross-device OR (inside jit, alongside the metrics)."""
+        import jax.numpy as jnp
+
+        return jnp.max(flag)
+
+    def wrap_step(self, step, *, in_shardings, out_shardings,
+                  donate_argnums=(0, 1)):
+        """jit ``step(params, opt, batch) -> (params, opt, metrics)`` with the
+        drain flag fused in: the compiled step takes the flag as an extra
+        input, emits the replicated ``metrics["drain"]`` scalar, and the
+        returned wrapper feeds/observes it transparently -- call sites keep
+        the plain 3-argument signature.  Both drivers share this wiring."""
+
+        def fused(params, opt_state, batch, flag):
+            p, o, m = step(params, opt_state, batch)
+            m = dict(m)
+            # the cross-process preemption OR rides the step's own
+            # collective schedule (no dedicated per-step allgather)
+            m["drain"] = self.reduce(flag)
+            return p, o, m
+
+        compiled = jax.jit(fused,
+                           in_shardings=(*in_shardings, self.sharding),
+                           out_shardings=out_shardings,
+                           donate_argnums=donate_argnums)
+
+        def fn(params, opt_state, batch):
+            p, o, m = compiled(params, opt_state, batch, self.device_flag())
+            self.observe(m["drain"])
+            return p, o, m
+
+        return fn
+
+    def observe(self, drain) -> None:
+        """Record the step's replicated drain scalar (device value; the host
+        read is deferred to ``last`` so pipelining is preserved)."""
+        self._last = drain
+
+    def last(self) -> bool:
+        """True when any process's flag was set as of the last observed step."""
+        return self._last is not None and int(jax.device_get(self._last)) > 0
 
 
 def batch_like(batch_fn):

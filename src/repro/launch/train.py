@@ -156,15 +156,32 @@ class PreemptionGuard:
     checkpoint before exiting 0 -- preempted pods save at the notice instead
     of waiting for the ``--ckpt-every`` cadence.
 
-    In multi-process runs ``should_stop`` all-reduces the flag, so a SIGTERM
-    delivered to ANY ONE process drains the whole job: every process sees the
-    notice at the same step boundary, runs the same coordinated final save,
-    and exits 0 together.  Because the poll is a collective, the drivers call
-    it unconditionally each step on every process.
+    In multi-process runs ``should_stop`` reduces the flag across processes,
+    so a SIGTERM delivered to ANY ONE process drains the whole job: every
+    process sees the notice at the same step boundary, runs the same
+    coordinated final save, and exits 0 together.  Because the poll is a
+    collective, the drivers call it unconditionally each step on every
+    process.
+
+    The reduction itself is FUSED into the compiled train step when a
+    ``distributed.FusedDrainFlag`` is attached (both drivers do, on
+    multi-process meshes): the flag enters the step as one int32 element per
+    device and comes back as a replicated ``metrics["drain"]`` scalar, so the
+    cross-process OR rides the step's existing collective schedule instead of
+    a dedicated per-step ``process_allgather``.  Without one attached,
+    ``should_stop`` falls back to the explicit allgather.
     """
 
     def __init__(self):
         self.triggered = False
+        self.fused = None  # a FusedDrainFlag once attach() is called
+
+    def attach(self, drain_flag):
+        """Bind a ``FusedDrainFlag``: ``should_stop`` reads the last fused
+        step's replicated drain scalar instead of all-gathering."""
+        self.fused = drain_flag
+        drain_flag.guard = self
+        return drain_flag
 
     def install(self, signals=(signal.SIGTERM,)) -> "PreemptionGuard":
         for s in signals:
@@ -182,6 +199,11 @@ class PreemptionGuard:
     def should_stop(self) -> bool:
         """True when ANY process holds a preemption notice (collective in
         multi-process runs -- call symmetrically, once per step)."""
+        if self.fused is not None:
+            # the OR already ran inside the step; local flag covers the
+            # pre-first-step window
+            return self.fused.last() or (jax.process_count() == 1
+                                         and self.triggered)
         return any_process_flag(self.triggered)
 
 
@@ -219,10 +241,21 @@ def train_plain(cfg, tc: TrainConfig, *, ckpt: Optional[CheckpointManager],
     if mesh is None:
         step_fn = jax.jit(make_train_step(model, tc), donate_argnums=(0, 1))
     else:
-        step_fn = jax.jit(make_train_step(model, tc),
-                          in_shardings=(psh, osh, bsh),
-                          out_shardings=(psh, osh, metrics_sh),
-                          donate_argnums=(0, 1))
+        drain = None
+        if preempt is not None and jax.process_count() > 1:
+            from repro.distributed import FusedDrainFlag
+
+            drain = preempt.attach(FusedDrainFlag(mesh, guard=preempt))
+        base_step = make_train_step(model, tc)
+        if drain is not None:
+            step_fn = drain.wrap_step(base_step,
+                                      in_shardings=(psh, osh, bsh),
+                                      out_shardings=(psh, osh, metrics_sh))
+        else:
+            step_fn = jax.jit(base_step,
+                              in_shardings=(psh, osh, bsh),
+                              out_shardings=(psh, osh, metrics_sh),
+                              donate_argnums=(0, 1))
     # the watchdog is a process-0 role (single-process runs are process 0)
     wd = Watchdog() if is_primary() else None
     for i in range(start, tc.steps):
@@ -372,8 +405,13 @@ def train_vcycle_ckpt(cfg, ml: MultiLevelConfig, tc: TrainConfig, *,
     followed by a clean exit 0.
     """
     batch_fn = make_driver_batch_fn(cfg, tc, mesh)
+    drain = None
+    if mesh is not None and preempt is not None and jax.process_count() > 1:
+        from repro.distributed import FusedDrainFlag
+
+        drain = preempt.attach(FusedDrainFlag(mesh, guard=preempt))
     runner = VCycleRunner(cfg, ml, tc, batch_fn, seed=tc.seed, verbose=verbose,
-                          mesh=mesh)
+                          mesh=mesh, drain_flag=drain)
     state = params = opt = None
     if ckpt is not None:
         m = ckpt.latest()
@@ -463,6 +501,17 @@ def main() -> None:
                     help="force float32 compute (tight cross-mesh resume "
                          "equivalence; default keeps the config's dtype)")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-local-dir", default="",
+                    help="per-host LOCAL checkpoint dir for clusters without "
+                         "a shared filesystem: each process passes its OWN "
+                         "path; chunks stay on the local disk, manifests and "
+                         "missing objects travel over the coordination "
+                         "service (overrides --ckpt-dir)")
+    ap.add_argument("--ckpt-dedup", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="content-addressed v3 checkpoint layout: unchanged "
+                         "leaves cost no I/O across consecutive saves "
+                         "(--no-ckpt-dedup writes the v2 whole-file layout)")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -496,7 +545,18 @@ def main() -> None:
     tc = TrainConfig(steps=args.steps, warmup_steps=max(args.steps // 20, 1),
                      peak_lr=args.lr, batch_size=args.batch, seq_len=args.seq,
                      seed=args.seed)
-    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if args.ckpt_local_dir:
+        if not args.ckpt_dedup:
+            # the no-shared-FS protocol exchanges digests, which only exist
+            # in the content-addressed layout -- don't silently ignore the
+            # explicitly requested v2 layout
+            ap.error("--no-ckpt-dedup is incompatible with --ckpt-local-dir "
+                     "(the per-host store is content-addressed by design)")
+        ckpt = CheckpointManager(args.ckpt_local_dir, local=True)
+    elif args.ckpt_dir:
+        ckpt = CheckpointManager(args.ckpt_dir, dedup=args.ckpt_dedup)
+    else:
+        ckpt = None
     preempt = PreemptionGuard().install() if ckpt is not None else None
     with (mesh_ctx(mesh) if mesh is not None else contextlib.nullcontext()):
         if args.vcycle:

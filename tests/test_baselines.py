@@ -1,0 +1,136 @@
+"""The paper's comparison baselines (core/baselines.py): every method runs at
+proxy scale and -- the part savings computations hinge on -- charges FLOPs on
+the SAME accounting basis as the V-cycle (small-model training included, LiGO
+operator fits and KI teacher forwards charged explicitly)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import fast_tc, tiny_dense
+from repro.config import MultiLevelConfig
+from repro.core import baselines
+from repro.core import flops as flops_lib
+from repro.core import operators as ops
+from repro.core.vcycle import VCycleRunner
+from repro.models.api import build_model
+
+
+def _arena():
+    cfg = tiny_dense(d_model=32, d_ff=64, vocab_size=128,
+                     compute_dtype=jnp.float32)
+    tc = fast_tc(steps=4, batch_size=2, seq_len=16, log_every=1)
+    ml = MultiLevelConfig(n_levels=2, alpha=0.25, e_a_frac=0.25,
+                          e_small_frac=0.5)
+    from repro.launch.train import make_batch_fn
+
+    return cfg, tc, ml, make_batch_fn(cfg, tc)
+
+
+def _fps(cfg, tc):
+    return flops_lib.train_step_flops(cfg, build_model(cfg).specs(),
+                                      tc.batch_size, tc.seq_len)
+
+
+def test_registry_is_complete_and_callable():
+    assert set(baselines.BASELINES) == {
+        "stackbert", "bert2bert", "ligo", "network_expansion", "ki"}
+    for fn in baselines.BASELINES.values():
+        assert callable(fn)
+
+
+def test_bert2bert_flops_accounting_per_phase():
+    """Width-only grow: small-phase increments charge the SMALL model's step
+    cost, final-phase increments the FULL model's -- and the small phase is
+    included in the total (paper §4.1 fairness)."""
+    cfg, tc, ml, bf = _arena()
+    hist = baselines.run_bert2bert(cfg, ml, tc, bf, small_steps=3, final_steps=3)
+    small_cfg = ops.coalesce_config(cfg, ml, width=True, depth=False)
+    small_fps, big_fps = _fps(small_cfg, tc), _fps(cfg, tc)
+    assert 0 < small_fps < big_fps
+    assert np.all(np.diff(hist.flops) > 0)  # cumulative axis is monotone
+    # log_every=1: the first entry lands after exactly one small step...
+    assert hist.flops[0] == pytest.approx(small_fps, rel=1e-9)
+    # ...the small phase is levelled 1, the final phase levelled 0
+    assert hist.level[0] == 1 and hist.level[-1] == 0
+    # per-step increments match the per-phase step cost exactly
+    diffs = np.diff(hist.flops)
+    assert diffs[0] == pytest.approx(small_fps, rel=1e-9)
+    assert diffs[-1] == pytest.approx(big_fps, rel=1e-9)
+    # total = 3 small + 3 big steps, nothing dropped, nothing double-charged
+    assert hist.flops[-1] == pytest.approx(3 * small_fps + 3 * big_fps,
+                                           rel=1e-9)
+
+
+def test_stackbert_depth_only_costs_half_model():
+    cfg, tc, ml, bf = _arena()
+    hist = baselines.run_stackbert(cfg, ml, tc, bf, small_steps=2, final_steps=2)
+    small_cfg = ops.coalesce_config(cfg, ml, width=False, depth=True)
+    small_fps = _fps(small_cfg, tc)
+    assert hist.flops[0] == pytest.approx(small_fps, rel=1e-9)
+    assert hist.flops[-1] == pytest.approx(2 * small_fps + 2 * _fps(cfg, tc),
+                                           rel=1e-9)
+
+
+def test_network_expansion_charges_ema_phase():
+    cfg, tc, ml, bf = _arena()
+    hist = baselines.run_network_expansion(cfg, ml, tc, bf, small_steps=2,
+                                           final_steps=2)
+    small_fps = _fps(ops.coalesce_config(cfg, ml), tc)
+    assert np.all(np.diff(hist.flops) > 0)
+    # the EMA-maintaining small phase is charged like plain small training
+    assert hist.flops[0] == pytest.approx(small_fps, rel=1e-9)
+    assert hist.flops[-1] == pytest.approx(2 * small_fps + 2 * _fps(cfg, tc),
+                                           rel=1e-9)
+
+
+def test_ligo_charges_operator_fit_at_full_model_cost():
+    cfg, tc, ml, bf = _arena()
+    hist = baselines.run_ligo(cfg, ml, tc, bf, small_steps=2, final_steps=2,
+                              fit_steps=2)
+    small_fps = _fps(ops.coalesce_config(cfg, ml), tc)
+    big_fps = _fps(cfg, tc)
+    # 2 small steps + 2 operator-fit steps (charged at the mapped FULL
+    # model's step cost) + 2 full steps
+    assert hist.flops[-1] == pytest.approx(2 * small_fps + 4 * big_fps,
+                                           rel=1e-9)
+    assert np.all(np.diff(hist.flops) > 0)
+
+
+def test_ki_charges_teacher_forward_every_step():
+    cfg, tc, ml, bf = _arena()
+    hist = baselines.run_ki(cfg, ml, tc, bf, small_steps=2, final_steps=2)
+    small_cfg = ops.coalesce_config(cfg, ml)
+    small = build_model(small_cfg)
+    model = build_model(cfg)
+    kd_fps = (_fps(cfg, tc)
+              + flops_lib.forward_flops(cfg, model.specs(), tc.batch_size, tc.seq_len)
+              + flops_lib.forward_flops(small_cfg, small.specs(), tc.batch_size,
+                                        tc.seq_len))
+    assert kd_fps > _fps(cfg, tc)  # distillation is NOT free
+    diffs = np.diff(hist.flops)
+    # final-phase increments carry the full student+teacher cost
+    assert diffs[-1] == pytest.approx(kd_fps, rel=1e-9)
+
+
+def test_vcycle_and_baselines_share_one_accounting_basis():
+    """The savings tables divide baseline FLOPs by V-cycle FLOPs; both sides
+    must price a step of the same (level) model identically, and the V-cycle
+    total must equal its schedule priced step by step."""
+    cfg, tc, ml, bf = _arena()
+    runner = VCycleRunner(cfg, ml, tc, bf, seed=0)
+    # level-1 pricing == the baselines' small-model pricing (same coalesce)
+    assert flops_lib.train_step_flops(
+        runner.cfgs[1], runner.specs[1], tc.batch_size, tc.seq_len) == \
+        pytest.approx(_fps(ops.coalesce_config(cfg, ml), tc), rel=1e-12)
+    out = runner.run()
+    expect = sum(
+        p.steps * flops_lib.train_step_flops(
+            runner.cfgs[p.level], runner.specs[p.level], tc.batch_size,
+            tc.seq_len)
+        for p in runner.plan)
+    assert out.total_flops == pytest.approx(expect, rel=1e-9)
+    assert hist_monotone(out.history)
+
+
+def hist_monotone(h):
+    return bool(np.all(np.diff(h.flops) > 0))

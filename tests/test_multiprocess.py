@@ -82,6 +82,45 @@ def test_manager_save_raises_on_non_addressable(tmp_path):
     assert cm.latest() is None  # nothing was published
 
 
+def test_fused_drain_flag_single_mesh_mechanics():
+    """The fused drain path end to end on a 1-device mesh: the flag array is
+    authored per process, the in-step reduce replicates it, and the guard
+    reads the fused scalar instead of all-gathering."""
+    import jax.numpy as jnp
+
+    from repro.distributed import FusedDrainFlag
+    from repro.launch.train import PreemptionGuard
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    g = PreemptionGuard()
+    drain = g.attach(FusedDrainFlag(mesh, guard=g))
+    assert g.should_stop() is False  # nothing observed yet
+
+    step = jax.jit(lambda flag: FusedDrainFlag.reduce(flag))
+    drain.observe(step(drain.device_flag()))
+    assert drain.last() is False and g.should_stop() is False
+    g.triggered = True
+    drain.observe(step(drain.device_flag()))
+    assert drain.last() is True and g.should_stop() is True
+    # un-attached guards keep the explicit allgather fallback
+    g2 = PreemptionGuard()
+    g2.triggered = True
+    assert g2.should_stop() is True
+
+
+def test_fused_drain_guard_local_flag_before_first_step():
+    """Single-process safety net: a SIGTERM caught before the first fused
+    step is observed must still stop at the next poll."""
+    from repro.distributed import FusedDrainFlag
+    from repro.launch.train import PreemptionGuard
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    g = PreemptionGuard()
+    g.attach(FusedDrainFlag(mesh, guard=g))
+    g.triggered = True
+    assert g.should_stop() is True
+
+
 def test_make_cli_mesh_rejects_indivisible_process_count():
     from repro.launch.mesh import make_cli_mesh
 
@@ -268,6 +307,86 @@ def test_checkpoint_crosses_process_counts_both_ways(tmp_path):
         assert "MP_RESUMED_OK" in out
     _assert_allclose_trees(_final_params(ck1, "step_00000999"),
                            _flat_params(ref.params), atol=1e-2)
+
+
+@pytest.mark.slow
+def test_v2_coordinated_save_writes_meta_for_scan_fallback(tmp_path):
+    """Regression: the v2 (``dedup=False``) coordinated save must write
+    ``meta.json`` into the step dir -- the torn-manifest ``_scan_fallback``
+    recovers metadata from it, and losing it silently drops the VCycleState
+    addressing on recovery."""
+    res = run_multiprocess("""
+        import os
+        import jax, jax.numpy as jnp
+        from repro.checkpoint import CheckpointManager
+
+        cm = CheckpointManager(os.environ["CK"], dedup=False)
+        cm.save(7, {"params": {"w": jnp.arange(4.0)}},
+                meta={"step": 7, "phase": "up"})
+        print("MP_V2_SAVED", flush=True)
+    """, n=2, env={"CK": str(tmp_path)})
+    for rc, out in res:
+        assert rc == 0, out[-3000:]
+        assert "MP_V2_SAVED" in out
+    assert os.path.exists(os.path.join(str(tmp_path), "step_00000007",
+                                       "meta.json"))
+    # torn manifest: points at a dir that no longer exists -> scan fallback
+    with open(os.path.join(str(tmp_path), "manifest.json"), "w") as f:
+        json.dump({"dir": "step_00000099", "step": 99, "meta": {}}, f)
+    from repro.checkpoint import CheckpointManager
+
+    m = CheckpointManager(str(tmp_path)).latest()
+    assert m["step"] == 7 and m["meta"]["phase"] == "up"
+
+
+@pytest.mark.slow
+def test_fused_drain_no_dedicated_allgather(tmp_path):
+    """ROADMAP open item closed: the per-step drain poll must run ZERO
+    dedicated ``process_allgather`` calls (the OR is fused into the compiled
+    step), while a flag raised on ONE process still drains BOTH at the same
+    agreed global step."""
+    res = run_multiprocess("""
+        import jax
+        from jax.experimental import multihost_utils as mh
+        calls = {"n": 0}
+        orig = mh.process_allgather
+        def counting(*a, **k):
+            calls["n"] += 1
+            return orig(*a, **k)
+        mh.process_allgather = counting
+
+        from helpers import mp_arena
+        from repro.core.vcycle import VCycleRunner
+        from repro.distributed import FusedDrainFlag, as_global_batch_fn
+        from repro.launch.train import PreemptionGuard, make_batch_fn
+
+        cfg, tc, ml = mp_arena()
+        mesh = jax.make_mesh((2, 1), ("data", "model"))
+        bf = as_global_batch_fn(make_batch_fn(cfg, tc, shard=0), mesh)
+        guard = PreemptionGuard()
+        drain = guard.attach(FusedDrainFlag(mesh, guard=guard))
+        runner = VCycleRunner(cfg, ml, tc, bf, seed=0, mesh=mesh,
+                              drain_flag=drain)
+
+        def on_step(st, p, o, stopping, dt):
+            if jax.process_index() == 1 and st.global_step == 5:
+                guard.triggered = True  # the notice lands on ONE process only
+            if guard.should_stop() and not stopping:
+                print("DRAIN_AT", st.global_step, "ALLGATHERS", calls["n"],
+                      flush=True)
+                raise SystemExit(0)
+
+        runner.run(on_step=on_step)
+        raise AssertionError("drain never fired")
+    """, n=2)
+    steps = []
+    for rc, out in res:
+        assert rc == 0, out[-3000:]
+        m = re.search(r"DRAIN_AT (\d+) ALLGATHERS (\d+)", out)
+        assert m is not None, out[-2000:]
+        steps.append(m.group(1))
+        assert m.group(2) == "0", out[-2000:]
+    assert steps[0] == steps[1]  # one agreed final step on both processes
 
 
 @pytest.mark.slow

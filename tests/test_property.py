@@ -1,4 +1,6 @@
 """Hypothesis property tests on the system's invariants."""
+import tempfile
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -73,6 +75,95 @@ def test_flops_to_reach_monotone(losses):
     t2 = flops_to_reach(h, float(min(sm)) + 1.0)
     if t1 is not None and t2 is not None:
         assert t2 <= t1  # easier targets are reached no later
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trips: arbitrary leaf names, dtypes and layouts
+
+
+def _bf16():
+    import ml_dtypes
+
+    return ml_dtypes.bfloat16
+
+
+# any character except the tree separator "/" (and surrogates, which cannot
+# encode); exercises unicode, "%", spaces, dots -- the v2 percent-encoding
+# and the v3 JSON-only names must both be injective over all of these
+leaf_names = st.text(
+    alphabet=st.characters(blacklist_characters="/",
+                           blacklist_categories=("Cs",)),
+    min_size=1, max_size=8)
+
+_DTYPES = [np.float32, np.float16, np.int32, np.int8, np.uint16, np.bool_]
+
+
+@st.composite
+def leaf_arrays(draw):
+    dtype = np.dtype(draw(st.sampled_from(_DTYPES + [_bf16()])))
+    shape = tuple(draw(st.lists(st.integers(1, 4), min_size=0, max_size=3)))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    if dtype == np.bool_:
+        return rng.integers(0, 2, size=shape).astype(bool)
+    if dtype.kind in "fV" or str(dtype) == "bfloat16":
+        return rng.normal(size=shape).astype(dtype)
+    return rng.integers(-100, 100, size=shape).astype(dtype)
+
+
+@settings(max_examples=20, deadline=None)
+@given(leaves=st.dictionaries(leaf_names, leaf_arrays(), min_size=1, max_size=4),
+       dedup=st.booleans(), step=st.integers(1, 10**6))
+def test_checkpoint_roundtrip_bit_exact(leaves, dedup, step):
+    """Arbitrary leaf names (unicode, "%", literal "__"), dtypes (incl.
+    bfloat16) and shapes (incl. 0-d) survive save -> restore bit-exactly, in
+    BOTH the v2 whole-file layout and the content-addressed v3 layout."""
+    from repro.checkpoint import CheckpointManager
+
+    # always include the historically-corrupting names alongside the drawn
+    # ones: a literal "__" (the pre-v2 separator), a raw "%", and unicode
+    leaves = dict(leaves)
+    leaves["w__gate"] = np.arange(3, dtype=np.float32)
+    leaves["100% ünïcode"] = np.float32(7.5).reshape(())
+    tree = {"params": leaves, "nested": {"inner": dict(leaves)}}
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, dedup=dedup)
+        cm.save(step, tree, meta={"step": step})
+        like = jax.tree.map(lambda v: jnp.zeros(v.shape, v.dtype), tree)
+        out, meta = cm.restore(like)
+        assert meta["step"] == step
+        flat_in, flat_out = jax.tree.leaves(tree), jax.tree.leaves(out)
+        assert len(flat_in) == len(flat_out)
+        for a, b in zip(flat_in, flat_out):
+            got = np.asarray(jax.device_get(b))
+            assert got.dtype == a.dtype, (got.dtype, a.dtype)
+            np.testing.assert_array_equal(got, np.asarray(a))
+
+
+@settings(max_examples=10, deadline=None)
+@given(dedup=st.booleans(), rows=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_checkpoint_roundtrip_across_shard_layouts(dedup, rows, seed):
+    """Restoring onto an explicit mesh sharding (the elastic re-shard path)
+    is still bit-exact for either layout -- checkpoints are logical."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.checkpoint import CheckpointManager
+
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(2 * rows, 4)).astype(np.float32)
+    tree = {"params": {"w": w, "b": rng.normal(size=(4,)).astype(np.float16)}}
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sh = {"params": {"w": NamedSharding(mesh, P("data", None)),
+                     "b": NamedSharding(mesh, P())}}
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d, dedup=dedup)
+        cm.save(1, tree, meta={"step": 1})
+        like = jax.tree.map(lambda v: jnp.zeros(v.shape, v.dtype), tree)
+        out, _ = cm.restore(like, shardings=sh)
+        assert out["params"]["w"].sharding == sh["params"]["w"]
+        np.testing.assert_array_equal(np.asarray(out["params"]["w"]), w)
+        assert out["params"]["b"].dtype == np.float16
 
 
 @settings(max_examples=10, deadline=None)

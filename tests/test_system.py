@@ -221,11 +221,13 @@ def test_vcycle_launcher_sigterm_checkpoints(tmp_path):
 def _load_final_params(ckpt_dir: str):
     import json
 
+    from repro.checkpoint.manager import _read_leaves
+
     m = json.load(open(os.path.join(ckpt_dir, "manifest.json")))
     assert m["meta"].get("phase") == "done", m["meta"]
-    pdir = os.path.join(ckpt_dir, m["dir"], "params")
-    return {fn: np.load(os.path.join(pdir, fn))
-            for fn in sorted(os.listdir(pdir)) if fn.endswith(".npy")}
+    # layout-agnostic: v3 manifests resolve through the object pool, v2 dirs
+    # through whole-leaf files
+    return _read_leaves(os.path.join(ckpt_dir, m["dir"], "params"))
 
 
 @pytest.mark.slow
