@@ -1,10 +1,12 @@
 """Serve a small model with batched requests + continuous batching.
 
-Exercises the production decode path (prefill -> per-slot KV splice -> batched
-serve_step) that the decode_32k / long_500k dry-run cells compile at scale.
+Exercises the production decode path at smoke scale: paged KV cache with
+block tables and prefix reuse (default), or the dense-slot oracle engine
+(--engine slots; required for SSM/hybrid mixers like jamba).
 
     PYTHONPATH=src python examples/serve_decode.py --arch tinyllama-1.1b
-    PYTHONPATH=src python examples/serve_decode.py --arch jamba-1.5-large-398b
+    PYTHONPATH=src python examples/serve_decode.py --arch tinyllama-1.1b --engine slots
+    PYTHONPATH=src python examples/serve_decode.py --arch jamba-1.5-large-398b --engine slots
 """
 import argparse
 import time
@@ -12,20 +14,24 @@ import time
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.serve import Request, Server
+from repro.launch.serve import PagedServer, Request, make_server
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--engine", choices=["paged", "slots"], default="paged")
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
-    print(f"serving {cfg.name} (smoke config), continuous batch={args.batch}")
-    srv = Server(cfg, batch=args.batch, max_seq=96)
+    print(f"serving {cfg.name} (smoke config), engine={args.engine}, "
+          f"continuous batch={args.batch}")
+    srv = make_server(cfg, engine=args.engine, batch=args.batch, max_seq=96,
+                      page_size=args.page_size)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=rng.integers(4, 16)),
                     max_new=args.max_new) for i in range(args.requests)]
@@ -35,6 +41,9 @@ def main():
     tok = sum(len(r.out) for r in done)
     print(f"{len(done)}/{args.requests} requests served, {tok} tokens, "
           f"{tok/dt:.1f} tok/s on CPU")
+    if isinstance(srv, PagedServer):
+        print(f"  pages: peak {srv.pages_in_use_peak}/{srv.alloc.pool.capacity}, "
+              f"prefill tokens saved by prefix reuse: {srv.prefill_tokens_saved}")
     for r in done[:4]:
         print(f"  req {r.rid}: {len(r.prompt)} prompt toks -> {r.out[:10]}")
 

@@ -1,7 +1,9 @@
 """Kernel backend registry + dispatch layer.
 
 Every compute hot-spot the paper optimizes (``flash_attention``,
-``coalesce_pair``, ``interp_axpy``) is registered under three backends:
+``coalesce_pair``, ``interp_axpy``) plus the serving-side
+``paged_attention_decode`` (block-table KV gather) is registered under three
+backends:
 
   * ``pallas``           -- the real Mosaic TPU kernel (TPU hardware only)
   * ``pallas-interpret`` -- the same kernel body executed by the Pallas
@@ -34,6 +36,7 @@ from repro.kernels import ref
 from repro.kernels.coalesce_pair import coalesce_pair, divisor_block
 from repro.kernels.flash_attention import flash_attention_with_vjp
 from repro.kernels.interp_axpy import interp_axpy
+from repro.kernels.paged_attention import paged_attention_decode
 
 BACKENDS = ("pallas", "pallas-interpret", "xla")
 ENV_VAR = "REPRO_KERNEL_BACKEND"
@@ -173,6 +176,24 @@ def _interp_axpy_xla(a, b, alpha, *, block=0):
     return ref.interp_axpy_ref(a, b, alpha)
 
 
+def _paged_attention_pallas(q, k_pages, v_pages, block_tables, lengths, *,
+                            scale=None, interpret=False):
+    return paged_attention_decode(q, k_pages, v_pages, block_tables, lengths,
+                                  scale=scale, interpret=interpret)
+
+
+def _paged_attention_interpret(q, k_pages, v_pages, block_tables, lengths, *,
+                               scale=None):
+    return _paged_attention_pallas(q, k_pages, v_pages, block_tables, lengths,
+                                   scale=scale, interpret=True)
+
+
+def _paged_attention_xla(q, k_pages, v_pages, block_tables, lengths, *,
+                         scale=None):
+    return ref.paged_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                                   scale=scale)
+
+
 register("flash_attention", "pallas", _flash_attention_pallas)
 register("flash_attention", "pallas-interpret", _flash_attention_interpret)
 register("flash_attention", "xla", _flash_attention_xla)
@@ -184,3 +205,7 @@ register("coalesce_pair", "xla", coalesce_pair_xla)
 register("interp_axpy", "pallas", _interp_axpy_pallas)
 register("interp_axpy", "pallas-interpret", _interp_axpy_interpret)
 register("interp_axpy", "xla", _interp_axpy_xla)
+
+register("paged_attention_decode", "pallas", _paged_attention_pallas)
+register("paged_attention_decode", "pallas-interpret", _paged_attention_interpret)
+register("paged_attention_decode", "xla", _paged_attention_xla)

@@ -14,6 +14,7 @@ from repro.kernels.coalesce_pair import coalesce_pair as _coalesce_pair
 from repro.kernels.flash_attention import flash_attention as _flash_attention
 from repro.kernels.flash_attention import flash_attention_with_vjp as _flash_attention_vjp
 from repro.kernels.interp_axpy import interp_axpy as _interp_axpy
+from repro.kernels.paged_attention import paged_attention_decode as _paged_attention_decode
 
 
 def _on_tpu() -> bool:
@@ -35,6 +36,15 @@ def flash_attention_vjp(q, k, v, *, causal=True, scale=None, block_q=128,
     interp = (not _on_tpu()) if interpret is None else interpret
     return _flash_attention_vjp(q, k, v, causal=causal, scale=scale,
                                 block_q=block_q, block_k=block_k, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention_decode(q, k_pages, v_pages, block_tables, lengths, *,
+                           scale=None, interpret=None):
+    """Decode attention through per-sequence block tables (paged KV serving)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return _paged_attention_decode(q, k_pages, v_pages, block_tables, lengths,
+                                   scale=scale, interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("axis", "w0", "block", "interpret"))

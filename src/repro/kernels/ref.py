@@ -21,6 +21,37 @@ def naive_attention(q, k, v, *, causal: bool = True, scale: Optional[float] = No
     return jnp.einsum("bhst,bhtv->bhsv", p, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                        scale: Optional[float] = None):
+    """Gather-based paged decode attention (the block-table oracle).
+
+    q: [B,KH,G,D], k_pages: [N,P,KH,D], v_pages: [N,P,KH,Dv],
+    block_tables: [B,M] int32, lengths: [B] int32 -> [B,KH,G,Dv].
+
+    Reassembles each sequence's K/V by indexing the page pool through its
+    block table, masks positions >= length, and runs one fp32 softmax.  Work
+    scales with M*P (the pages a batch actually spans), not max_seq.  A
+    length-0 row (idle slot) yields zeros -- the Pallas kernel pins the same
+    convention, so idle rows stay backend-invariant.
+    """
+    B, KH, G, D = q.shape
+    N, P, _, Dv = v_pages.shape
+    M = block_tables.shape[1]
+    scale = D ** -0.5 if scale is None else scale
+    k = k_pages[block_tables].reshape(B, M * P, KH, D)
+    v = v_pages[block_tables].reshape(B, M * P, KH, Dv)
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    valid = jnp.arange(M * P)[None, :] < lengths[:, None]  # [B, T]
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(jnp.isfinite(s), p, 0.0)  # empty rows -> all-zero p
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgt,btkv->bkgv", p / l, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def coalesce_pair_ref(w, *, axis: int, w0: float = 0.5):
     """Dense F-matrix oracle: F = [w0*I ; w0*I] contraction along ``axis``."""
     n = w.shape[axis]

@@ -1,10 +1,20 @@
 """Batched serving driver: prefill + decode with continuous batching (lite).
 
-A request queue feeds a fixed-width decode batch; finished sequences (EOS or
-length budget) free their slot, the next request is prefilled into that slot
-(per-slot KV-cache splice), and decode resumes -- the standard production
-serving loop, at smoke scale on CPU and mesh-sharded on real hardware (the
-decode step is exactly the function the decode_* dry-run cells compile).
+Two engines share the request/queue semantics:
+
+  * ``slots`` -- the original fixed-width decode batch over dense
+    ``[batch, max_seq]`` caches; per-admit splice into a free slot.  Kept as
+    the equivalence oracle (greedy decode must match token-for-token).
+  * ``paged`` -- vLLM-style paged KV: cache leaves are a shared
+    ``[n_pages, page_size, ...]`` pool, each request holds a block table of
+    page ids (``launch/paging.py``), admission is by free-page count, and
+    decode reads K/V through the block table (the ``paged_attention_decode``
+    op in ``kernels/dispatch.py``) so per-step cost scales with the pages a
+    request actually occupies, not ``max_seq``.  Prompt pages are keyed by a
+    rolling blake2b digest, so requests sharing a prompt prefix reuse its
+    (refcounted) pages and only prefill the non-shared tail.
+
+See ``src/repro/launch/README.md`` for the architecture notes.
 """
 from __future__ import annotations
 
@@ -18,8 +28,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.paging import NULL_PAGE, BlockAllocator
 from repro.models import lm as lm_lib
-from repro.models.api import build_model, make_prefill_step, make_serve_step
+from repro.models.api import (build_model, make_paged_decode_step,
+                              make_prefill_step, make_serve_step)
 from repro.param import Spec, is_spec
 
 
@@ -37,14 +49,24 @@ def zeros_cache(cfg, batch: int, max_seq: int):
                         cs, is_leaf=is_spec)
 
 
-def splice_slot(batch_cache, slot_cache, slot: int):
-    """Write a single-sequence prefill cache into slot ``slot`` of the batch cache."""
-    return jax.tree.map(
-        lambda b, s: b.at[:, slot].set(s[:, 0].astype(b.dtype)) if b.ndim >= 2 else b,
-        batch_cache, slot_cache)
+def zeros_paged_cache(cfg, n_pages: int, page_size: int):
+    cs = lm_lib.paged_cache_specs(cfg, n_pages, page_size)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype or cfg.compute_dtype),
+                        cs, is_leaf=is_spec)
+
+
+def _bucket(n: int, cap: Optional[int] = None) -> int:
+    """Next power of two >= n (bounds the jit retrace count for shapes that
+    vary with load: decode table width, extend tail length)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap) if cap is not None else b
 
 
 class Server:
+    """Fixed-slot engine (dense caches) -- the equivalence oracle."""
+
     def __init__(self, cfg, batch: int = 4, max_seq: int = 128):
         self.cfg = cfg
         self.model = build_model(cfg)
@@ -102,16 +124,6 @@ class Server:
         return False
 
     def _splice(self, prefill_cache, slot: int, prompt_len: int):
-        def one(b, s):
-            if b.ndim < 2:
-                return b
-            # seq-sized leaves: pad prefill cache (seq=prompt_len) to max_seq
-            if s.shape[2:] == b.shape[2:] and s.shape[1] != b.shape[1] and s.ndim == b.ndim:
-                pad = [(0, 0)] * s.ndim
-                pad[1] = (0, b.shape[1] - s.shape[1])
-                s = jnp.pad(s, pad)
-            return b.at[slot].set(s[0].astype(b.dtype))
-
         # leaves layout: [layers, batch, ...] after scan stacking -> axis0=layers
         def one_stacked(b, s):
             if b.ndim < 3:
@@ -166,19 +178,242 @@ class Server:
             ticks += 1
         return self.done
 
+    def reset(self) -> None:
+        """Clear request state but keep params + compiled steps (bench reuse).
+        Stale cache contents are safe: every admit overwrites its slot's rows
+        and decode reads are position-masked."""
+        self.pos[:] = 0
+        self.last_tok[:] = 0
+        self.active = [None] * self.batch
+        self.done, self.rejected = [], []
+
+
+class PagedServer:
+    """Paged-KV engine: block tables over a shared page pool + prefix reuse.
+
+    Admission reserves the request's worst-case page count up front
+    (``ceil(min(len(prompt)+max_new, max_seq) / page_size)``), so an admitted
+    request never stalls on allocation mid-decode.  Cache-hit prompts run a
+    bucketed "extend" step over just the non-shared tail.
+    """
+
+    def __init__(self, cfg, batch: int = 4, max_seq: int = 128,
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 prefix_reuse: bool = True):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.batch = batch
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.max_pages_per_req = -(-max_seq // page_size)
+        if n_pages is None:
+            # default: page-count parity with the slot engine's dense cache
+            # (+1 for the reserved null page) -- admission then slot-bound
+            n_pages = batch * self.max_pages_per_req + 1
+        self.n_pages = n_pages
+        self.params = self.model.init(jax.random.PRNGKey(0))
+        self.prefill = jax.jit(make_prefill_step(self.model))
+        self.paged_step = jax.jit(make_paged_decode_step(self.model),
+                                  donate_argnums=(1,))
+        self._write_prompt = jax.jit(self._write_prompt_impl, donate_argnums=(0,))
+        self.pages = zeros_paged_cache(cfg, n_pages, page_size)
+        self.alloc = BlockAllocator(n_pages, page_size, prefix_reuse=prefix_reuse)
+        self.tables: List[Optional[List[int]]] = [None] * batch
+        self.pos = np.zeros((batch,), np.int32)
+        self.last_tok = np.zeros((batch,), np.int32)
+        self.active: List[Optional[Request]] = [None] * batch
+        self.done: List[Request] = []
+        self.rejected: List[Request] = []
+        self.prefill_tokens_computed = 0
+
+    # -- stats ---------------------------------------------------------------
+    @property
+    def prefill_tokens_saved(self) -> int:
+        return self.alloc.reused_tokens_total
+
+    @property
+    def pages_in_use_peak(self) -> int:
+        return self.alloc.pool.in_use_peak
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "pages_in_use_peak": self.pages_in_use_peak,
+            "pages_capacity": self.alloc.pool.capacity,
+            "prefill_tokens_saved": self.prefill_tokens_saved,
+            "prefill_tokens_computed": self.prefill_tokens_computed,
+        }
+
+    # -- continuous batching ------------------------------------------------
+    def fits(self, req: Request) -> bool:
+        """Admissible-ever check: room to decode one token (same invariant as
+        the slot engine) AND a worst-case block table the pool could hold."""
+        if len(req.prompt) > self.max_seq - 1:
+            return False
+        total = min(len(req.prompt) + req.max_new, self.max_seq)
+        return self.alloc.pages_needed(total) <= self.alloc.pool.capacity
+
+    def admit(self, req: Request) -> bool:
+        """Reserve pages + prefill; False when no batch row / too few free
+        pages right now.  Raises ``ValueError`` for never-admissible prompts
+        (same contract as the slot engine's admit)."""
+        if not self.fits(req):
+            raise ValueError(
+                f"prompt of length {len(req.prompt)} cannot be admitted: "
+                f"max_seq={self.max_seq} leaves no room to decode "
+                f"(need len(prompt) <= max_seq - 1 and a block table "
+                f"<= {self.alloc.pool.capacity} pages)")
+        row = next((i for i, r in enumerate(self.active) if r is None), None)
+        if row is None:
+            return False
+        L = len(req.prompt)
+        total_positions = min(L + req.max_new, self.max_seq)
+        got = self.alloc.admit(req.rid, req.prompt, total_positions)
+        if got is None:
+            return False
+        table, reuse_len = got
+        if reuse_len == 0:
+            # cold prompt: the SAME prefill step as the slot engine (first
+            # token bitwise-identical), then scatter its cache into our pages
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, pc = self.prefill(self.params, toks, None, None)
+            n_pg = -(-L // self.page_size)
+            ids = jnp.asarray(table[:n_pg], jnp.int32)
+            self.pages = self._write_prompt(self.pages, pc, ids)
+            first = int(jnp.argmax(logits[0]))
+            self.prefill_tokens_computed += L
+        else:
+            # warm prompt: run only the tail through a bucketed extend step;
+            # reused pages are read through the block table (never rewritten)
+            tail = np.asarray(req.prompt[reuse_len:], np.int32)
+            S = len(tail)
+            S_b = _bucket(S)
+            toks = np.zeros((S_b,), np.int32)
+            toks[S_b - S:] = tail
+            positions = np.full((S_b,), -1, np.int32)  # left-pad -> null page
+            positions[S_b - S:] = np.arange(reuse_len, L, dtype=np.int32)
+            M_b = _bucket(len(table), cap=self.max_pages_per_req)
+            bt = np.full((M_b,), NULL_PAGE, np.int32)
+            bt[:len(table)] = table
+            logits, self.pages = self.paged_step(
+                self.params, self.pages, jnp.asarray(toks)[None],
+                jnp.asarray(positions)[None], jnp.asarray(bt)[None])
+            first = int(jnp.argmax(logits[0]))
+            self.prefill_tokens_computed += S
+        self.tables[row] = table
+        self.active[row] = req
+        self.pos[row] = L
+        self.last_tok[row] = first
+        return True
+
+    def _write_prompt_impl(self, pages, prefill_cache, page_ids):
+        """Scatter a prefill cache ([layers, 1, L, ...] leaves) into the page
+        pool at ``page_ids`` ([n_pg] int32, logical page order)."""
+        P = self.page_size
+        n_pg = page_ids.shape[0]
+
+        def one(pool, c):
+            c = c[:, 0]  # [layers, L, ...]
+            pad = [(0, 0)] * c.ndim
+            pad[1] = (0, n_pg * P - c.shape[1])
+            c = jnp.pad(c, pad)
+            c = c.reshape(c.shape[0], n_pg, P, *c.shape[2:])
+            return pool.at[:, page_ids].set(c.astype(pool.dtype))
+
+        return jax.tree.map(one, pages, prefill_cache)
+
+    def step(self) -> None:
+        act = [i for i, r in enumerate(self.active) if r is not None]
+        if not act:
+            return
+        M_b = _bucket(max(len(self.tables[i]) for i in act),
+                      cap=self.max_pages_per_req)
+        bt = np.full((self.batch, M_b), NULL_PAGE, np.int32)
+        positions = np.full((self.batch, 1), -1, np.int32)  # idle row: len 0
+        toks = np.zeros((self.batch, 1), np.int32)
+        for i in act:
+            bt[i, :len(self.tables[i])] = self.tables[i]
+            positions[i, 0] = self.pos[i]
+            toks[i, 0] = self.last_tok[i]
+        logits, self.pages = self.paged_step(
+            self.params, self.pages, jnp.asarray(toks),
+            jnp.asarray(positions), jnp.asarray(bt))
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for i in act:
+            req = self.active[i]
+            req.out.append(int(nxt[i]))
+            self.pos[i] = min(self.pos[i] + 1, self.max_seq - 1)
+            self.last_tok[i] = nxt[i]
+            if len(req.out) >= req.max_new or self.pos[i] >= self.max_seq - 1:
+                self.done.append(req)
+                self.active[i] = None
+                self.tables[i] = None
+                self.alloc.complete(req.rid)
+
+    def run(self, requests: List[Request], max_ticks: int = 10_000) -> List[Request]:
+        """Same queue semantics as the slot engine: drain, rejecting
+        never-admissible prompts up front; a request that merely lacks free
+        pages *now* waits at the queue head for completions to free pages."""
+        queue = list(requests)
+        ticks = 0
+        while (queue or any(self.active)) and ticks < max_ticks:
+            while queue:
+                if not self.fits(queue[0]):
+                    req = queue.pop(0)
+                    self.rejected.append(req)
+                    print(f"[serve] rejected req {req.rid}: prompt length "
+                          f"{len(req.prompt)} > max_seq-1 = {self.max_seq - 1}")
+                    continue
+                if not self.admit(queue[0]):
+                    break
+                queue.pop(0)
+            if any(a is not None for a in self.active):
+                self.step()
+            ticks += 1
+        return self.done
+
+    def reset(self) -> None:
+        """Clear pool/request state, keep params + compiled steps.  Stale page
+        contents are safe: decode reads are length-masked and every admit
+        writes the prompt range of its fresh pages before they are read."""
+        self.alloc = BlockAllocator(self.n_pages, self.page_size,
+                                    prefix_reuse=self.alloc.prefix is not None)
+        self.tables = [None] * self.batch
+        self.pos[:] = 0
+        self.last_tok[:] = 0
+        self.active = [None] * self.batch
+        self.done, self.rejected = [], []
+        self.prefill_tokens_computed = 0
+
+
+def make_server(cfg, engine: str = "paged", batch: int = 4, max_seq: int = 128,
+                page_size: int = 16, n_pages: Optional[int] = None,
+                prefix_reuse: bool = True):
+    if engine == "slots":
+        return Server(cfg, batch=batch, max_seq=max_seq)
+    if engine == "paged":
+        return PagedServer(cfg, batch=batch, max_seq=max_seq,
+                           page_size=page_size, n_pages=n_pages,
+                           prefix_reuse=prefix_reuse)
+    raise ValueError(f"unknown engine {engine!r}; expected 'paged' or 'slots'")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--engine", choices=("paged", "slots"), default="paged")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--no-prefix-reuse", action="store_true")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    srv = Server(cfg, batch=args.batch, max_seq=args.max_seq)
+    srv = make_server(cfg, engine=args.engine, batch=args.batch,
+                      max_seq=args.max_seq, page_size=args.page_size,
+                      prefix_reuse=not args.no_prefix_reuse)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12)),
                     max_new=args.max_new) for i in range(args.requests)]
@@ -186,8 +421,10 @@ def main() -> None:
     done = srv.run(reqs)
     dt = time.time() - t0
     tok = sum(len(r.out) for r in done)
-    print(f"[serve] {len(done)} requests, {tok} tokens in {dt:.1f}s "
-          f"({tok/max(dt,1e-9):.1f} tok/s, batch={args.batch})")
+    print(f"[serve] engine={args.engine}: {len(done)} requests, {tok} tokens "
+          f"in {dt:.1f}s ({tok/max(dt,1e-9):.1f} tok/s, batch={args.batch})")
+    if isinstance(srv, PagedServer):
+        print(f"[serve] {srv.stats()}")
     for r in done[:3]:
         print(f"  req {r.rid}: prompt[:4]={r.prompt[:4].tolist()} -> out[:8]={r.out[:8]}")
 

@@ -33,6 +33,26 @@ from repro.param import Spec
 NEG_INF = -1e30
 
 
+def paged_write(pages: jax.Array, new: jax.Array, positions: jax.Array,
+                block_tables: jax.Array) -> jax.Array:
+    """Scatter ``new`` [B,S,...] into ``pages`` [N,P,...] at absolute
+    ``positions`` [B,S] routed through per-sequence ``block_tables`` [B,M].
+
+    Touches only the pages the written tokens land in -- admission/decode
+    cost scales with the request, not with the pool.  Position -1 marks a
+    padding slot (bucketed extend steps left-pad); its write is routed to
+    page 0, the pool's reserved null page that no request ever owns.
+    """
+    P = pages.shape[1]
+    valid = positions >= 0
+    pos = jnp.maximum(positions, 0)
+    page_ix = jnp.minimum(pos // P, block_tables.shape[1] - 1)
+    pid = jnp.take_along_axis(block_tables, page_ix, axis=1)
+    pid = jnp.where(valid, pid, 0)
+    off = jnp.where(valid, pos % P, 0)
+    return pages.at[pid, off].set(new.astype(pages.dtype))
+
+
 def seq_masked_write(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
     """Write ``new`` [B,1,...] into ``cache`` [B,T,...] at per-example ``pos``.
 
@@ -379,6 +399,45 @@ def gqa_cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Spe
     }
 
 
+def gqa_paged_cache_specs(cfg: ModelConfig, n_pages: int, page_size: int) -> Dict[str, Spec]:
+    """Page-pool K/V leaves: ``[n_pages, page_size, KH, D]`` shared across all
+    sequences (block tables route each sequence to its pages)."""
+    KH, D = cfg.n_kv_heads, cfg.resolved_head_dim
+    ax = ("pages", "page_seq", "cache_kv_heads", "head_dim")
+    dt = cfg.compute_dtype
+    return {
+        "k": Spec((n_pages, page_size, KH, D), ax, init="zeros", dtype=dt),
+        "v": Spec((n_pages, page_size, KH, D), ax, init="zeros", dtype=dt),
+    }
+
+
+def _paged_gqa_attention(qg, cache_k, cache_v, cfg: ModelConfig, *,
+                         positions: jax.Array, block_tables: jax.Array,
+                         scale: float) -> jax.Array:
+    """qg: [B,S,KH,G,D] against paged K/V [N,P,KH,D] -> [B,S,KH,G,D].
+
+    S == 1 (decode) dispatches to the registered ``paged_attention_decode``
+    op; S > 1 (prefix-extend prefill) gathers the table's pages and runs the
+    plain masked attention -- either way, work scales with M*P (the pages the
+    batch actually spans), not with the server-wide max_seq.
+    """
+    B, S = qg.shape[:2]
+    P = cache_k.shape[1]
+    M = block_tables.shape[1]
+    if S == 1:
+        lengths = positions[:, -1] + 1  # the just-written token is attendable
+        backend = kdispatch.resolve_backend(
+            "paged_attention_decode", cfg.kernel_backend or None,
+            default="pallas" if cfg.attn_impl == "pallas" else None)
+        out = kdispatch.get_impl("paged_attention_decode", backend)(
+            qg[:, 0], cache_k, cache_v, block_tables, lengths, scale=scale)
+        return out[:, None]
+    k = cache_k[block_tables].reshape(B, M * P, *cache_k.shape[2:])
+    v = cache_v[block_tables].reshape(B, M * P, *cache_v.shape[2:])
+    return plain_attention(qg, k, v, causal=True, scale=scale,
+                           q_positions=positions)
+
+
 def gqa_apply(
     p: Dict,
     x: jax.Array,
@@ -388,6 +447,7 @@ def gqa_apply(
     causal: bool,
     use_rope: bool = True,
     cache: Optional[Dict] = None,
+    block_tables: Optional[jax.Array] = None,  # [B,M]: cache is paged
 ) -> Tuple[jax.Array, Optional[Dict]]:
     B, S, E = x.shape
     H, KH, D = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -414,6 +474,20 @@ def gqa_apply(
     v = shard_l(v, ("batch", "seq", "act_kv_heads", "head_dim"))
 
     new_cache = None
+    if cache is not None and block_tables is not None:
+        # paged decode/extend: write the new tokens' K/V into their pages,
+        # then attend through the block table (single-host serving path --
+        # the pool is not mesh-sharded, so no shard_l constraints here)
+        ck = paged_write(cache["k"], k, positions, block_tables)
+        cv = paged_write(cache["v"], v, positions, block_tables)
+        qg = q.reshape(B, S, KH, H // KH, D)
+        out = _paged_gqa_attention(qg, ck, cv, cfg, positions=positions,
+                                   block_tables=block_tables, scale=D ** -0.5)
+        out = out.reshape(B, S, H, D)
+        y = jnp.einsum("bshd,hde->bse", out, p["wo"].astype(cdt))
+        if cfg.use_bias:
+            y = y + p["bo"].astype(cdt)
+        return y, {"k": ck, "v": cv}
     if cache is not None:
         pos0 = positions[:, 0]  # [B] write offsets
         ck = seq_masked_write(cache["k"], k, pos0)
@@ -469,6 +543,18 @@ def mla_cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Spe
     }
 
 
+def mla_paged_cache_specs(cfg: ModelConfig, n_pages: int, page_size: int) -> Dict[str, Spec]:
+    """Paged compressed-latent cache: the MLA analogue of the K/V page pool
+    (the latent + rope strips are what absorbed decode actually reads)."""
+    dt = cfg.compute_dtype
+    return {
+        "ckv": Spec((n_pages, page_size, cfg.kv_lora_rank),
+                    ("pages", "page_seq", "kv_lora"), init="zeros", dtype=dt),
+        "kpe": Spec((n_pages, page_size, cfg.qk_rope_head_dim),
+                    ("pages", "page_seq", "rope_dim"), init="zeros", dtype=dt),
+    }
+
+
 def mla_apply(
     p: Dict,
     x: jax.Array,
@@ -477,6 +563,7 @@ def mla_apply(
     positions: jax.Array,
     causal: bool = True,
     cache: Optional[Dict] = None,
+    block_tables: Optional[jax.Array] = None,  # [B,M]: cache is paged
 ) -> Tuple[jax.Array, Optional[Dict]]:
     B, S, E = x.shape
     H = cfg.n_heads
@@ -513,12 +600,25 @@ def mla_apply(
         new_cache = None
     else:
         # absorbed decode: score and combine in the compressed latent space
-        pos0 = positions[:, 0]
-        cc = seq_masked_write(cache["ckv"], ckv, pos0)
-        ck = seq_masked_write(cache["kpe"], kpe, pos0)
-        cc = shard_l(cc, ("batch", "cache_seq", "kv_lora"))
-        ck = shard_l(ck, ("batch", "cache_seq", "rope_dim"))
-        new_cache = {"ckv": cc, "kpe": ck}
+        if block_tables is not None:
+            # paged: latent/rope strips live in a shared page pool; reassemble
+            # this batch's rows by gathering through the block table.  tp below
+            # is then the logical position (table slot i covers [i*P,(i+1)*P)),
+            # so the existing position mask also hides table padding (page 0).
+            # Single-host serving path -- no shard_l on the pool.
+            cc = paged_write(cache["ckv"], ckv, positions, block_tables)
+            ck = paged_write(cache["kpe"], kpe, positions, block_tables)
+            new_cache = {"ckv": cc, "kpe": ck}
+            M, P = block_tables.shape[1], cc.shape[1]
+            cc = cc[block_tables].reshape(B, M * P, cc.shape[-1])
+            ck = ck[block_tables].reshape(B, M * P, ck.shape[-1])
+        else:
+            pos0 = positions[:, 0]
+            cc = seq_masked_write(cache["ckv"], ckv, pos0)
+            ck = seq_masked_write(cache["kpe"], kpe, pos0)
+            cc = shard_l(cc, ("batch", "cache_seq", "kv_lora"))
+            ck = shard_l(ck, ("batch", "cache_seq", "rope_dim"))
+            new_cache = {"ckv": cc, "kpe": ck}
         wk_b = p["wkv_b"].astype(cdt)[..., :nope]  # [kl,H,nope]
         wv_b = p["wkv_b"].astype(cdt)[..., nope:]  # [kl,H,vd]
         q_eff = jnp.einsum("bshn,lhn->bshl", qn, wk_b)

@@ -32,6 +32,9 @@ class Model:
     def cache_specs(self, batch: int, max_seq: int):
         return lm_lib.cache_specs(self.cfg, batch, max_seq)
 
+    def paged_cache_specs(self, n_pages: int, page_size: int):
+        return lm_lib.paged_cache_specs(self.cfg, n_pages, page_size)
+
     def init(self, key: jax.Array):
         return init_tree(key, self.specs(), dtype=self.cfg.param_dtype)
 
@@ -177,6 +180,27 @@ def make_serve_step(model: Model) -> Callable:
         return out["logits"][:, -1, :], out["caches"]
 
     return serve_step
+
+
+def make_paged_decode_step(model: Model) -> Callable:
+    """step(params, pages, tokens [B,S], positions [B,S], block_tables [B,M])
+    -> (last_logits, pages).
+
+    Decode/extend against the shared page pool: each batch row reads and
+    writes K/V through its block-table row, so cost scales with the pages a
+    request actually occupies, not ``max_seq``.  S==1 is the batched decode
+    step; S>1 is the prefix-reuse "extend" step (left-padded rows carry
+    positions == -1, which ``paged_write`` routes to the reserved null page).
+    """
+    cfg = model.cfg
+
+    def paged_decode_step(params, pages, tokens, positions, block_tables):
+        out = lm_lib.lm_forward(params, tokens, cfg, positions=positions,
+                                mode="decode", caches=pages,
+                                block_tables=block_tables)
+        return out["logits"][:, -1, :], out["caches"]
+
+    return paged_decode_step
 
 
 def init_train_state(model: Model, tc: TrainConfig, key: jax.Array):

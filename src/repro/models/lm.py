@@ -89,6 +89,20 @@ def block_cache_specs(cfg: ModelConfig, bs: BlockSpec, batch: int, max_seq: int,
     return c
 
 
+def paged_block_cache_specs(cfg: ModelConfig, bs: BlockSpec, n_pages: int,
+                            page_size: int) -> Dict[str, Any]:
+    """Block-table layout for the serving page pool.  Only pure self-attention
+    blocks page cleanly: SSM state is O(1) (nothing to page) and cross/enc-dec
+    K/V is request-global, so those families stay on the slot engine."""
+    if bs.mixer != "attn":
+        raise NotImplementedError(
+            f"paged KV serving supports mixer 'attn' only, got {bs.mixer!r} "
+            "(use --engine slots)")
+    return {"self": (attn.mla_paged_cache_specs(cfg, n_pages, page_size)
+                     if cfg.attn_type == "mla"
+                     else attn.gqa_paged_cache_specs(cfg, n_pages, page_size))}
+
+
 # ---------------------------------------------------------------------------
 # per-block apply
 
@@ -103,6 +117,7 @@ def block_apply(
     mode: str,  # train | prefill | decode
     cache: Optional[Dict] = None,  # required for decode; ignored otherwise
     cross_src: Optional[jax.Array] = None,  # image embeds / encoder output
+    block_tables: Optional[jax.Array] = None,  # [B,M]: decode cache is paged
 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
     """Returns (x, new_cache, moe_aux).  new_cache is None in train mode,
     freshly created in prefill mode, updated in decode mode."""
@@ -118,10 +133,12 @@ def block_apply(
         self_cache = cache.get("self") if decode else None
         if cfg.attn_type == "mla":
             y, c_new = attn.mla_apply(p["mixer"], h, cfg, positions=positions,
-                                      causal=causal, cache=self_cache)
+                                      causal=causal, cache=self_cache,
+                                      block_tables=block_tables)
         else:
             y, c_new = attn.gqa_apply(p["mixer"], h, cfg, positions=positions,
-                                      causal=causal, cache=self_cache)
+                                      causal=causal, cache=self_cache,
+                                      block_tables=block_tables)
         x = x + y
         if prefill:
             new_cache["self"] = _prefill_self_cache(p["mixer"], h, cfg, positions)
@@ -248,6 +265,19 @@ def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
     }
 
 
+def paged_cache_specs(cfg: ModelConfig, n_pages: int, page_size: int) -> Dict[str, Any]:
+    """Whole-model page-pool specs: one ``[n_pages, page_size, ...]`` pool per
+    stacked layer leaf, shared across requests via per-request block tables."""
+    return {
+        f"stage_{i}": {
+            f"b{j}": _stack(paged_block_cache_specs(cfg, bsj, n_pages, page_size),
+                            st.repeats)
+            for j, bsj in enumerate(st.pattern)
+        }
+        for i, st in enumerate(cfg.stages)
+    }
+
+
 # ---------------------------------------------------------------------------
 # forward
 
@@ -271,6 +301,7 @@ def run_stages(
     mode: str,
     caches: Optional[Dict] = None,  # decode: input caches; prefill: created fresh
     cross_src: Optional[jax.Array] = None,
+    block_tables: Optional[jax.Array] = None,  # [B,M]: caches are page pools
 ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
     aux_total = jnp.zeros((), jnp.float32)
     new_caches: Dict[str, Any] = {}
@@ -287,7 +318,8 @@ def run_stages(
                 cj = c_sl.get(f"b{j}") if c_sl is not None else None
                 xx, c_new, a = block_apply(p_sl[f"b{j}"], xx, cfg, bsj,
                                            positions=positions, mode=mode,
-                                           cache=cj, cross_src=cross_src)
+                                           cache=cj, cross_src=cross_src,
+                                           block_tables=block_tables)
                 if c_new is not None:
                     c_out[f"b{j}"] = c_new
                 aux = aux + a
@@ -311,6 +343,7 @@ def lm_forward(
     img_embeds: Optional[jax.Array] = None,  # [B,N,E] (vlm stub frontend)
     enc_frames: Optional[jax.Array] = None,  # [B,T,E] (audio stub frontend)
     enc_out: Optional[jax.Array] = None,  # precomputed encoder output (decode)
+    block_tables: Optional[jax.Array] = None,  # [B,M]: decode caches are paged
 ) -> Dict[str, Any]:
     B, S = tokens.shape
     if positions is None:
@@ -331,7 +364,7 @@ def lm_forward(
 
     x, new_caches, aux = run_stages(params["stages"], cfg.stages, x, cfg,
                                     positions=positions, mode=mode, caches=caches,
-                                    cross_src=cross_src)
+                                    cross_src=cross_src, block_tables=block_tables)
     x = norm_apply(params["final_norm"], x, cfg)
     logits = unembed(params["embed"], x, cfg)
     logits = shard_l(logits, ("batch", "seq", "act_vocab"))

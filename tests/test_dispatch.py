@@ -22,7 +22,8 @@ ML = MultiLevelConfig(n_levels=2)
 
 
 def test_registry_contents():
-    assert dispatch.ops() == ("coalesce_pair", "flash_attention", "interp_axpy")
+    assert dispatch.ops() == ("coalesce_pair", "flash_attention", "interp_axpy",
+                              "paged_attention_decode")
     for op in dispatch.ops():
         assert dispatch.backends(op) == dispatch.BACKENDS
 
@@ -43,6 +44,36 @@ def test_resolution_order(monkeypatch):
 @pytest.mark.skipif(jax.default_backend() == "tpu", reason="off-TPU behavior")
 def test_pallas_downgrades_to_interpret_off_tpu():
     assert dispatch.resolve_backend("flash_attention", "pallas") == "pallas-interpret"
+    assert dispatch.resolve_backend("paged_attention_decode", "pallas") == "pallas-interpret"
+
+
+# ---------------------------------------------------------------------------
+# paged_attention_decode: cross-backend agreement (xla gather oracle vs the
+# Pallas kernel body in interpret mode)
+
+
+def _paged_case(key=0, B=3, KH=2, G=2, D=16, N=12, P=8, M=3):
+    ks = jax.random.split(jax.random.PRNGKey(key), 3)
+    q = jax.random.normal(ks[0], (B, KH, G, D), jnp.float32)
+    k_pages = jax.random.normal(ks[1], (N, P, KH, D), jnp.float32)
+    v_pages = jax.random.normal(ks[2], (N, P, KH, D), jnp.float32)
+    # distinct pages per row; row 2 idle (length 0, table all null-page)
+    bt = jnp.array([[1, 2, 3], [4, 5, 0], [0, 0, 0]], jnp.int32)
+    lengths = jnp.array([3 * P, P + 3, 0], jnp.int32)  # full / partial / idle
+    return q, k_pages, v_pages, bt, lengths
+
+
+def test_paged_attention_backends_agree():
+    q, k_pages, v_pages, bt, lengths = _paged_case()
+    got = {b: dispatch.dispatch("paged_attention_decode", q, k_pages, v_pages,
+                                bt, lengths, backend=b)
+           for b in ("xla", "pallas-interpret")}
+    np.testing.assert_allclose(np.asarray(got["pallas-interpret"]),
+                               np.asarray(got["xla"]), atol=1e-5, rtol=1e-5)
+    # idle row (length 0) is exactly zero in BOTH backends -- the pinned
+    # convention that keeps inactive decode slots backend-invariant
+    for b, out in got.items():
+        assert not np.asarray(out[2]).any(), f"{b}: idle row not zero"
 
 
 def test_build_model_rejects_bad_backend():

@@ -184,3 +184,99 @@ def test_cd_identity_random_tensors(seed, n):
     de = _project_tree({"stage_0": {"w": small}}, specs, maps, "decoalesce", False)
     rt = _project_tree(de, specs, maps, "coalesce", False)
     np.testing.assert_allclose(np.asarray(rt["stage_0"]["w"]), np.asarray(small), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# serving page allocator (launch/paging.py)
+
+
+def _allocator_invariants(alloc, live):
+    """The pinned pool invariants: full free/held accounting, no page in two
+    live tables except via refcounted sharing, refcount == holder count."""
+    pool = alloc.pool
+    free = set(pool._free)
+    held = {}
+    for table in live.values():
+        assert len(set(table)) == len(table), "page assigned twice in one table"
+        for pid in table:
+            held[pid] = held.get(pid, 0) + 1
+    for pid, n in held.items():
+        assert pid != 0, "null page handed to a request"
+        assert pid not in free, "page simultaneously free and held"
+        assert pool.refcount(pid) == n, "refcount != number of live holders"
+    assert set(pool._ref) == set(held), "allocated page held by no request (leak)"
+    assert len(free) + len(pool._ref) == pool.capacity
+
+
+@settings(max_examples=50, deadline=None)
+@given(data=st.data())
+def test_page_allocator_admit_complete_interleavings(data):
+    """Arbitrary admit/complete/denied interleavings: never leak a page,
+    never double-assign, shared prefix pages freed exactly when the last
+    referencing request completes, pool empty after a full drain."""
+    from repro.launch.paging import BlockAllocator
+
+    P = data.draw(st.sampled_from([2, 4]), label="page_size")
+    n_pages = data.draw(st.integers(min_value=4, max_value=24), label="n_pages")
+    reuse = data.draw(st.booleans(), label="prefix_reuse")
+    alloc = BlockAllocator(n_pages, P, prefix_reuse=reuse)
+    live = {}
+    rid = 0
+    for _ in range(data.draw(st.integers(min_value=1, max_value=30), label="n_ops")):
+        if data.draw(st.booleans(), label="admit?") or not live:
+            # tiny alphabet + optional common stem -> frequent shared prefixes
+            body = data.draw(st.lists(st.integers(0, 3), min_size=1, max_size=10),
+                             label="prompt")
+            if data.draw(st.booleans(), label="stem?"):
+                body = [1, 2, 3, 4, 1, 2, 3, 4] + body
+            total = len(body) + data.draw(st.integers(1, 8), label="max_new")
+            got = alloc.admit(rid, body, total)
+            if got is not None:
+                table, reuse_len = got
+                assert len(table) == alloc.pages_needed(total)
+                assert reuse_len <= len(body) - 1  # >= 1 fresh tail token
+                assert reuse_len % P == 0
+                live[rid] = table
+            else:
+                # denied admit must not have touched any state
+                _allocator_invariants(alloc, live)
+            rid += 1
+        else:
+            victim = data.draw(st.sampled_from(sorted(live)), label="complete")
+            alloc.complete(victim)
+            del live[victim]
+        _allocator_invariants(alloc, live)
+    for r in sorted(live):
+        alloc.complete(r)
+        del live[r]
+        _allocator_invariants(alloc, live)
+    assert alloc.pool.n_used == 0
+    assert alloc.prefix is None or len(alloc.prefix) == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(stem_pages=st.integers(min_value=1, max_value=3),
+       tail_a=st.integers(min_value=1, max_value=5),
+       tail_b=st.integers(min_value=1, max_value=5))
+def test_shared_prefix_page_freed_on_last_release(stem_pages, tail_a, tail_b):
+    """Two prompts sharing a stem share its full pages; those pages survive
+    the first completion and free exactly at the second."""
+    from repro.launch.paging import BlockAllocator, page_digests
+
+    P = 4
+    alloc = BlockAllocator(32, P)
+    stem = list(range(stem_pages * P))
+    ta, _ = alloc.admit(0, stem + [7] * tail_a, stem_pages * P + tail_a + 2)
+    tb, reused = alloc.admit(1, stem + [9] * tail_b, stem_pages * P + tail_b + 2)
+    assert reused == stem_pages * P
+    shared = ta[:stem_pages]
+    assert tb[:stem_pages] == shared
+    assert all(alloc.pool.refcount(p) == 2 for p in shared)
+    alloc.complete(0)
+    assert all(alloc.pool.refcount(p) == 1 for p in shared)  # still referenced
+    # digests still served from the survivor's pages
+    assert len(alloc.prefix.lookup(page_digests(stem, P))) == stem_pages
+    alloc.complete(1)
+    assert all(alloc.pool.refcount(p) == 0 for p in shared)  # last ref freed
+    assert alloc.pool.n_used == 0
+    assert len(alloc.prefix) == 0

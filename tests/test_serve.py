@@ -1,11 +1,15 @@
-"""Serving-loop tests: the continuous-batching lifecycle (admit -> decode ->
-slot frees on length budget -> re-prefill into the freed slot) and the
-oversized-prompt guards -- serving previously had zero dedicated tests."""
+"""Serving-loop tests, run against BOTH engines (slots oracle + paged KV):
+the continuous-batching lifecycle (admit -> decode -> slot/pages free on
+length budget -> re-prefill into the freed capacity), the oversized-prompt
+guards, and the paged engine's extra contracts -- token-for-token greedy
+equivalence with the slot oracle (prefix reuse on and off), page-pool
+admission/exhaustion behavior, and zero leaked pages after a drain."""
 import numpy as np
 import pytest
 
+from helpers import tiny_dense, tiny_mla
 from repro.configs import get_config
-from repro.launch.serve import Request, Server
+from repro.launch.serve import PagedServer, Request, Server, make_server
 
 
 @pytest.fixture(scope="module")
@@ -13,10 +17,25 @@ def server_cfg():
     return get_config("tinyllama-1.1b", smoke=True)
 
 
-def test_continuous_batching_recycles_slots(server_cfg):
-    """More requests than slots: finished sequences must free their slot and
-    the next request must prefill into it (the core of continuous batching)."""
-    srv = Server(server_cfg, batch=2, max_seq=48)
+@pytest.fixture(params=["slots", "paged"])
+def engine(request):
+    return request.param
+
+
+def _server(cfg, engine, batch, max_seq, **kw):
+    return make_server(cfg, engine=engine, batch=batch, max_seq=max_seq,
+                       page_size=8, **kw)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle (both engines)
+
+
+def test_continuous_batching_recycles_slots(server_cfg, engine):
+    """More requests than slots: finished sequences must free their capacity
+    and the next request must prefill into it (the core of continuous
+    batching) -- identical contract for both engines."""
+    srv = _server(server_cfg, engine, batch=2, max_seq=48)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(0, 100, size=int(rng.integers(4, 9))),
                     max_new=3) for i in range(5)]
@@ -29,10 +48,11 @@ def test_continuous_batching_recycles_slots(server_cfg):
     assert len(done) > srv.batch
 
 
-def test_admit_rejects_oversized_prompt(server_cfg):
+def test_admit_rejects_oversized_prompt(server_cfg, engine):
     """len(prompt) > max_seq - 1 used to crash _splice with a negative pad (or
-    silently drop cache writes once pos ran past max_seq); admit must refuse."""
-    srv = Server(server_cfg, batch=2, max_seq=16)
+    silently drop cache writes once pos ran past max_seq); admit must refuse
+    -- in both engines, with the same error contract."""
+    srv = _server(server_cfg, engine, batch=2, max_seq=16)
     with pytest.raises(ValueError, match="cannot be admitted"):
         srv.admit(Request(rid=0, prompt=np.arange(16, dtype=np.int64), max_new=4))
     with pytest.raises(ValueError, match="cannot be admitted"):
@@ -41,10 +61,10 @@ def test_admit_rejects_oversized_prompt(server_cfg):
     assert srv.admit(Request(rid=2, prompt=np.arange(15, dtype=np.int64), max_new=4))
 
 
-def test_run_drops_oversized_instead_of_wedging(server_cfg):
+def test_run_drops_oversized_instead_of_wedging(server_cfg, engine):
     """An oversized request at the queue head must be routed to ``rejected``;
     the well-formed requests behind it must still complete."""
-    srv = Server(server_cfg, batch=2, max_seq=16)
+    srv = _server(server_cfg, engine, batch=2, max_seq=16)
     reqs = [Request(rid=0, prompt=np.arange(20, dtype=np.int64), max_new=2),
             Request(rid=1, prompt=np.arange(4, dtype=np.int64), max_new=2),
             Request(rid=2, prompt=np.arange(5, dtype=np.int64), max_new=2)]
@@ -54,12 +74,138 @@ def test_run_drops_oversized_instead_of_wedging(server_cfg):
     assert all(len(r.out) == 2 for r in done)
 
 
-def test_pos_capped_at_last_cache_index(server_cfg):
+def test_pos_capped_at_last_cache_index(server_cfg, engine):
     """A sequence admitted near the budget edge frees after one token and its
     pos never exceeds max_seq - 1 (decode cache writes past that are silently
     dropped by jax's out-of-range .at[].set semantics)."""
-    srv = Server(server_cfg, batch=1, max_seq=12)
+    srv = _server(server_cfg, engine, batch=1, max_seq=12)
     done = srv.run([Request(rid=0, prompt=np.arange(11, dtype=np.int64),
                             max_new=50)])
     assert len(done) == 1 and len(done[0].out) >= 1
     assert int(srv.pos[0]) <= srv.max_seq - 1
+
+
+# ---------------------------------------------------------------------------
+# paged-vs-slots greedy equivalence (the acceptance oracle)
+
+
+def _request_mix(vocab: int, seed: int = 1):
+    """Mixed lengths + a shared-prefix cohort + one oversized prompt."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, vocab, size=20)
+    reqs = [Request(rid=i, prompt=rng.integers(0, vocab, size=int(rng.integers(4, 14))),
+                    max_new=6) for i in range(5)]
+    for i in range(5, 8):
+        tail = rng.integers(0, vocab, size=3 + i)
+        reqs.append(Request(rid=i, prompt=np.concatenate([shared, tail]), max_new=6))
+    reqs.append(Request(rid=99, prompt=rng.integers(0, vocab, size=64), max_new=4))
+    return reqs
+
+
+@pytest.mark.parametrize("prefix_reuse", [True, False])
+def test_paged_matches_slots_token_for_token(prefix_reuse):
+    """Same request list through both engines -> identical greedy outputs per
+    request AND identical rejections, with prefix reuse on and off.  f32
+    compute so bf16 argmax ties can't flake the comparison."""
+    cfg = tiny_dense(compute_dtype="float32")
+    results = {}
+    for engine in ("slots", "paged"):
+        srv = make_server(cfg, engine=engine, batch=3, max_seq=48, page_size=8,
+                          prefix_reuse=prefix_reuse)
+        done = srv.run(_request_mix(cfg.vocab_size))
+        results[engine] = ({r.rid: r.out for r in done},
+                           sorted(r.rid for r in srv.rejected))
+    assert results["paged"][1] == results["slots"][1] == [99]
+    assert results["paged"][0] == results["slots"][0]
+
+
+def test_paged_matches_slots_mla():
+    """Equivalence also holds for the MLA (compressed-latent) cache layout."""
+    cfg = tiny_mla(compute_dtype="float32")
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in (5, 9, 12)]
+    results = {}
+    for engine in ("slots", "paged"):
+        srv = make_server(cfg, engine=engine, batch=2, max_seq=32, page_size=4)
+        done = srv.run([Request(rid=i, prompt=p, max_new=4)
+                        for i, p in enumerate(prompts)])
+        results[engine] = {r.rid: r.out for r in done}
+    assert results["paged"] == results["slots"]
+
+
+def test_prefix_reuse_saves_prefill_and_stays_exact():
+    """The shared-prefix cohort must actually skip prefill work (saved > 0)
+    while still emitting the slot oracle's exact tokens (covered above); here
+    we pin the accounting: saved tokens only with reuse on, and the computed
+    count shrinks by exactly the saved amount."""
+    cfg = tiny_dense(compute_dtype="float32")
+    reqs = _request_mix(cfg.vocab_size)
+    total_prompt = sum(len(r.prompt) for r in reqs if len(r.prompt) <= 47)
+    on = make_server(cfg, engine="paged", batch=3, max_seq=48, page_size=8)
+    on.run(_request_mix(cfg.vocab_size))
+    off = make_server(cfg, engine="paged", batch=3, max_seq=48, page_size=8,
+                      prefix_reuse=False)
+    off.run(_request_mix(cfg.vocab_size))
+    assert on.prefill_tokens_saved > 0
+    assert off.prefill_tokens_saved == 0
+    assert off.prefill_tokens_computed == total_prompt
+    assert on.prefill_tokens_computed == total_prompt - on.prefill_tokens_saved
+
+
+# ---------------------------------------------------------------------------
+# page-pool admission behavior
+
+
+def test_pool_exhaustion_queues_until_pages_free():
+    """A pool too small for all requests at once must make later requests
+    wait for completions (not crash, not reject), and still finish them all."""
+    cfg = tiny_dense(compute_dtype="float32")
+    rng = np.random.default_rng(7)
+    # each request needs ceil(min(10+4, 32)/4) = 4 pages; pool holds 8 ->
+    # at most 2 in flight though batch would allow 4
+    srv = make_server(cfg, engine="paged", batch=4, max_seq=32, page_size=4,
+                      n_pages=9, prefix_reuse=False)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=10),
+                    max_new=4) for i in range(5)]
+    done = srv.run(reqs)
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3, 4]
+    assert srv.rejected == []
+    assert srv.pages_in_use_peak <= 8
+    assert srv.alloc.pool.n_used == 0  # every page returned
+
+
+def test_never_admittable_block_table_rejected():
+    """A prompt whose worst-case block table exceeds the whole pool can never
+    admit and must be rejected up front (not wedge the queue)."""
+    cfg = tiny_dense(compute_dtype="float32")
+    srv = make_server(cfg, engine="paged", batch=2, max_seq=64, page_size=4,
+                      n_pages=5)  # capacity 4 pages = 16 positions
+    reqs = [Request(rid=0, prompt=np.arange(30, dtype=np.int64), max_new=8),
+            Request(rid=1, prompt=np.arange(6, dtype=np.int64), max_new=4)]
+    done = srv.run(reqs)
+    assert [r.rid for r in srv.rejected] == [0]
+    assert [r.rid for r in done] == [1]
+
+
+def test_pool_fully_free_after_drain():
+    cfg = tiny_dense(compute_dtype="float32")
+    srv = make_server(cfg, engine="paged", batch=3, max_seq=48, page_size=8)
+    srv.run(_request_mix(cfg.vocab_size))
+    assert srv.alloc.pool.n_used == 0
+    assert srv.pages_in_use_peak > 0
+    assert len(srv.alloc.live) == 0
+    # prefix cache must not outlive its pages
+    assert srv.alloc.prefix is None or len(srv.alloc.prefix) == 0
+
+
+def test_reset_reuses_compiled_steps():
+    """reset() must clear request/pool state but keep the compiled steps
+    usable (the bench warmup contract)."""
+    cfg = tiny_dense(compute_dtype="float32")
+    srv = make_server(cfg, engine="paged", batch=2, max_seq=32, page_size=8)
+    first = srv.run([Request(rid=0, prompt=np.arange(6, dtype=np.int64), max_new=3)])
+    out0 = list(first[0].out)
+    srv.reset()
+    assert srv.done == [] and srv.alloc.pool.n_used == 0
+    again = srv.run([Request(rid=1, prompt=np.arange(6, dtype=np.int64), max_new=3)])
+    assert again[0].out == out0  # same prompt, same params -> same tokens
