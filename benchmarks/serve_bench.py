@@ -9,10 +9,21 @@ Fixed request mixes (deterministic seeds):
   * ``shared_prefix`` -- a cohort sharing one long prompt stem: measures
                          prefix-reuse (prefill tokens saved) on top of tok/s.
 
+On top of the engine comparison, a **speculative** point measures
+self-speculative decoding (``SpeculativePolicy``): the serving weights are
+made projection-consistent (``decoalesce(width-only)`` of a level-1 init, the
+exactly function-preserving direction pinned in tests/test_operators.py) so
+the coalesced draft agrees with the full model and the accept rate is a
+hardware-independent property of the projection, not of noise.  The point
+records tok/s, accept rate and the draft/verify wall-time split, and asserts
+losslessness (token streams identical to greedy on the same weights).
+
 Each invocation appends one trajectory point; ``--check-regression`` compares
-the *ratio* paged/slots tok/s on the uniform mix against the last committed
-point and fails (exit 1) on a >20% drop -- the ratio is hardware-independent,
-so a laptop, CI runner and TPU host share one trajectory file.
+the *ratios* (paged/slots and speculative/greedy tok/s on the uniform mix)
+against the last committed point and fails (exit 1) on a >20% drop, plus an
+absolute accept-rate floor for the speculative point -- ratios and accept
+rate are hardware-independent, so a laptop, CI runner and TPU host share one
+trajectory file.
 
 Smoke scale by default: runs on CPU in a couple of minutes (the CI
 ``serve-drill`` job runs exactly this).
@@ -20,6 +31,7 @@ Smoke scale by default: runs on CPU in a couple of minutes (the CI
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -27,11 +39,16 @@ import time
 from typing import Dict, List
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import RESULTS_DIR, emit
+from repro.config import MultiLevelConfig
 from repro.configs import get_config
-from repro.launch.serve import PagedServer, Request, make_server
+from repro.core import operators as ops
+from repro.launch.serve import (PagedServer, Request, SpeculativePolicy,
+                                make_server)
+from repro.models.api import build_model
 
 BENCH_PATH = os.path.join(RESULTS_DIR, "BENCH_serve.json")
 
@@ -86,9 +103,16 @@ def main() -> int:
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="speculative draft length")
+    ap.add_argument("--accept-floor", type=float, default=0.60,
+                    help="minimum speculative accept rate on the "
+                         "projection-consistent workload (--check-regression)")
     ap.add_argument("--check-regression", action="store_true",
-                    help="fail on >tol drop of the paged/slots uniform tok/s "
-                         "ratio vs the last committed trajectory point")
+                    help="fail on >tol drop of the paged/slots or "
+                         "speculative/greedy uniform tok/s ratios vs the last "
+                         "committed trajectory point, or on an accept rate "
+                         "below --accept-floor")
     ap.add_argument("--regression-tol", type=float, default=0.20)
     args = ap.parse_args()
 
@@ -112,6 +136,46 @@ def main() -> int:
 
     ratio = (results["uniform"]["paged"]["tok_s"]
              / max(results["uniform"]["slots"]["tok_s"], 1e-9))
+
+    # -- speculative point: self-drafted decode from the width-coalesced
+    # level-1 model.  Serving weights are decoalesce(width-only)(small init)
+    # so the draft is function-identical to the full model (the exactly
+    # preserving direction): accept rate then measures the speculation
+    # machinery itself, hardware- and seed-independently.  This section runs
+    # in float32 -- the same discipline as the paged-vs-slots equivalence
+    # tests: greedy argmax streams are only bit-stable across batch shapes
+    # (S=1 decode vs S=k+1 verify) when the compute dtype has the headroom,
+    # and the losslessness assert below is exact, not approximate.
+    ml = MultiLevelConfig()
+    cfg32 = dataclasses.replace(cfg, compute_dtype=jnp.float32)
+    model = build_model(cfg32)
+    small_cfg = ops.coalesce_config(cfg32, ml, width=True, depth=False)
+    p_serve = ops.make_decoalesce_fn(model.specs(), cfg32, ml,
+                                     width=True, depth=False)(
+        build_model(small_cfg).init(jax.random.PRNGKey(0)))
+    gsrv = make_server(cfg32, engine="paged", batch=args.batch,
+                       max_seq=args.max_seq, page_size=args.page_size)
+    gsrv.set_params(p_serve)
+    gsrv.run(uniform())  # warmup with the projection-consistent weights
+    greedy_res = _timed_run(gsrv, uniform)
+    gsrv.reset()
+    greedy_toks = {r.rid: r.out for r in gsrv.run(uniform())}
+
+    spec_pol = SpeculativePolicy(k=args.draft_k, ml=ml,
+                                 draft_width=True, draft_depth=False)
+    spec_srv = make_server(cfg32, engine="paged", batch=args.batch,
+                           max_seq=args.max_seq, page_size=args.page_size,
+                           policy=spec_pol)
+    spec_srv.set_params(p_serve)
+    spec_srv.run(uniform())  # warmup: compile draft/verify paths
+    spec_res = _timed_run(spec_srv, uniform)
+    spec_srv.reset()
+    spec_toks = {r.rid: r.out for r in spec_srv.run(uniform())}
+    lossless = spec_toks == greedy_toks
+    spec_ratio = spec_res["tok_s"] / max(greedy_res["tok_s"], 1e-9)
+    emit("serve/uniform/speculative", 1e6 / max(spec_res["tok_s"], 1e-9),
+         f"tok_s={spec_res['tok_s']:.1f} accept={spec_res['accept_rate']:.2f}")
+
     entry = {
         "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "platform": jax.default_backend(),
@@ -123,10 +187,24 @@ def main() -> int:
         "uniform": results["uniform"],
         "shared_prefix": results["shared_prefix"],
         "paged_over_slots_uniform": ratio,
+        "speculative": {
+            "draft_k": args.draft_k,
+            "uniform": spec_res,
+            "greedy_uniform_tok_s": greedy_res["tok_s"],
+            "spec_over_greedy_uniform": spec_ratio,
+            "accept_rate": spec_res["accept_rate"],
+            "draft_time_s": spec_res["draft_time_s"],
+            "verify_time_s": spec_res["verify_time_s"],
+            "lossless": bool(lossless),
+        },
     }
     saved = results["shared_prefix"]["paged"].get("prefill_tokens_saved", 0)
     print(f"[serve_bench] uniform paged/slots tok/s ratio: {ratio:.2f}")
     print(f"[serve_bench] shared-prefix prefill tokens saved: {saved}")
+    print(f"[serve_bench] speculative: {spec_res['tok_s']:.1f} tok/s "
+          f"({spec_ratio:.2f}x greedy), accept={spec_res['accept_rate']:.2f}, "
+          f"draft/verify = {spec_res['draft_time_s']:.3f}s/"
+          f"{spec_res['verify_time_s']:.3f}s, lossless={lossless}")
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(BENCH_PATH, "w") as f:
@@ -137,6 +215,20 @@ def main() -> int:
     if saved <= 0:
         print("[serve_bench] FAIL: shared-prefix mix saved no prefill tokens")
         rc = 1
+    if not lossless:
+        print("[serve_bench] FAIL: speculative token stream diverged from "
+              "greedy decode (losslessness broken)")
+        rc = 1
+    if args.check_regression:
+        if spec_res["accept_rate"] < args.accept_floor:
+            print(f"[serve_bench] FAIL: speculative accept rate "
+                  f"{spec_res['accept_rate']:.2f} below floor "
+                  f"{args.accept_floor:.2f} on the projection-consistent "
+                  f"workload")
+            rc = 1
+        else:
+            print(f"[serve_bench] accept-rate gate OK: "
+                  f"{spec_res['accept_rate']:.2f} >= {args.accept_floor:.2f}")
     if args.check_regression and baseline:
         prev = baseline[-1]["paged_over_slots_uniform"]
         floor = prev * (1.0 - args.regression_tol)
@@ -147,6 +239,19 @@ def main() -> int:
         else:
             print(f"[serve_bench] regression gate OK: {ratio:.2f} >= {floor:.2f} "
                   f"(committed {prev:.2f} - {args.regression_tol:.0%})")
+        spec_pts = [b["speculative"]["spec_over_greedy_uniform"]
+                    for b in baseline if "speculative" in b]
+        if spec_pts:
+            sfloor = spec_pts[-1] * (1.0 - args.regression_tol)
+            if spec_ratio < sfloor:
+                print(f"[serve_bench] FAIL: speculative/greedy ratio "
+                      f"{spec_ratio:.2f} regressed >{args.regression_tol:.0%} "
+                      f"below committed {spec_pts[-1]:.2f}")
+                rc = 1
+            else:
+                print(f"[serve_bench] speculative gate OK: {spec_ratio:.2f} "
+                      f">= {sfloor:.2f} (committed {spec_pts[-1]:.2f} - "
+                      f"{args.regression_tol:.0%})")
     return rc
 
 

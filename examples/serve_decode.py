@@ -2,10 +2,14 @@
 
 Exercises the production decode path at smoke scale: paged KV cache with
 block tables and prefix reuse (default), or the dense-slot oracle engine
-(--engine slots; required for SSM/hybrid mixers like jamba).
+(--engine slots; required for SSM/hybrid mixers like jamba).  With
+--policy speculative the paged engine self-drafts k tokens per tick from
+the coalesced level-1 projection of its own weights and verifies them in
+one batched full-model step (lossless for greedy decode).
 
     PYTHONPATH=src python examples/serve_decode.py --arch tinyllama-1.1b
     PYTHONPATH=src python examples/serve_decode.py --arch tinyllama-1.1b --engine slots
+    PYTHONPATH=src python examples/serve_decode.py --arch tinyllama-1.1b --policy speculative
     PYTHONPATH=src python examples/serve_decode.py --arch jamba-1.5-large-398b --engine slots
 """
 import argparse
@@ -21,6 +25,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--engine", choices=["paged", "slots"], default="paged")
+    ap.add_argument("--policy", choices=["greedy", "speculative"], default="greedy")
+    ap.add_argument("--draft-k", type=int, default=4)
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
@@ -29,9 +35,10 @@ def main():
 
     cfg = get_config(args.arch, smoke=True)
     print(f"serving {cfg.name} (smoke config), engine={args.engine}, "
-          f"continuous batch={args.batch}")
+          f"policy={args.policy}, continuous batch={args.batch}")
     srv = make_server(cfg, engine=args.engine, batch=args.batch, max_seq=96,
-                      page_size=args.page_size)
+                      page_size=args.page_size, policy=args.policy,
+                      draft_k=args.draft_k)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=rng.integers(4, 16)),
                     max_new=args.max_new) for i in range(args.requests)]
@@ -44,6 +51,11 @@ def main():
     if isinstance(srv, PagedServer):
         print(f"  pages: peak {srv.pages_in_use_peak}/{srv.alloc.pool.capacity}, "
               f"prefill tokens saved by prefix reuse: {srv.prefill_tokens_saved}")
+        if args.policy == "speculative":
+            st = srv.stats()
+            print(f"  speculative: accept={st['accept_rate']:.2f} over "
+                  f"{st['drafted_tokens']} drafted tokens "
+                  f"(draft {st['draft_time_s']:.2f}s / verify {st['verify_time_s']:.2f}s)")
     for r in done[:4]:
         print(f"  req {r.rid}: {len(r.prompt)} prompt toks -> {r.out[:10]}")
 

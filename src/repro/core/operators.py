@@ -296,3 +296,29 @@ def make_interpolate_fn(alpha: float, backend: Optional[str] = None,
                         out_shardings=None):
     return jax.jit(lambda a, b: interpolate(a, b, alpha, backend=backend),
                    out_shardings=out_shardings)
+
+
+def make_draft_projection(specs, cfg: ModelConfig,
+                          ml: Optional[MultiLevelConfig] = None,
+                          *, width: bool = True, depth: bool = True,
+                          out_shardings=None) -> Tuple[ModelConfig, Any]:
+    """Serving-time self-speculative draft: ``(draft_cfg, project_fn)``.
+
+    The level-1 coalesced model is a deterministic *projection* of the
+    serving params -- a free, always-in-sync draft model for speculative
+    decoding: no separate training run, no second checkpoint to distribute.
+    ``project_fn(params) -> draft_params`` is the jit'd Coalescing transition
+    (sharded-in/sharded-out when ``out_shardings`` is given); re-invoke it
+    whenever the serving params change (hot weight reload) and the draft
+    stays in sync by construction.
+
+    ``width``/``depth`` pick the projection direction: width-only drafts
+    track the full model most closely (width de-coalescing is exactly
+    function-preserving for untied embeddings, see tests/test_operators.py),
+    full level-1 (both) is the cheapest draft the paper defines.
+    """
+    ml = ml or MultiLevelConfig()
+    draft_cfg = coalesce_config(cfg, ml, width=width, depth=depth)
+    project = make_coalesce_fn(specs, cfg, ml, width=width, depth=depth,
+                               out_shardings=out_shardings)
+    return draft_cfg, project

@@ -146,6 +146,14 @@ class BlockAllocator:
         self.prefix: Optional[PrefixCache] = PrefixCache() if prefix_reuse else None
         self.live: Dict[int, List[int]] = {}  # rid -> block table
         self.reused_tokens_total = 0
+        # per-request length bookkeeping for speculative decode (see
+        # advance/mark_written/rollback): committed positions vs the
+        # written high-water mark of in-flight (unverified) draft positions
+        self.lengths: Dict[int, int] = {}      # rid -> committed positions
+        self.written: Dict[int, int] = {}      # rid -> written high-water
+        self.reserved: Dict[int, int] = {}     # rid -> worst-case positions
+        self._prompt_len: Dict[int, int] = {}
+        self.rolled_back_total = 0             # positions rewound across rollbacks
 
     def pages_needed(self, total_positions: int) -> int:
         return -(-total_positions // self.page_size)
@@ -183,7 +191,53 @@ class BlockAllocator:
                 self.prefix.insert(digests[i], table[i])
         self.live[rid] = table
         self.reused_tokens_total += len(reused) * P
+        self.lengths[rid] = len(tokens)
+        self.written[rid] = len(tokens)
+        self.reserved[rid] = total_positions
+        self._prompt_len[rid] = len(tokens)
         return table, len(reused) * P
+
+    # -- speculative-decode length protocol ---------------------------------
+    # Committed positions only ever grow via ``advance`` (verified tokens);
+    # speculation first raises the ``written`` high-water with
+    # ``mark_written`` (the verify step writes k+1 unverified positions),
+    # then ``rollback`` rewinds ``written`` to the committed length once the
+    # accepted prefix is known.  The rejected positions' stale K/V needs no
+    # physical erase: reads are position-masked (queries only attend
+    # positions <= their own) and the next committed write at that position
+    # overwrites it.  Shared prefix pages can never be touched: every
+    # speculative write lands at a position >= the prompt length, while
+    # prefix reuse is capped at ``(len(prompt)-1) // page_size`` pages --
+    # so rollback cannot poison the PrefixCache.
+
+    def advance(self, rid: int, n: int = 1) -> int:
+        """Commit ``n`` more positions (verified/emitted tokens)."""
+        new = self.lengths[rid] + n
+        if new > self.reserved[rid]:
+            raise ValueError(
+                f"request {rid}: committing {new} positions exceeds the "
+                f"admission reserve of {self.reserved[rid]}")
+        self.lengths[rid] = new
+        self.written[rid] = max(self.written[rid], new)
+        return new
+
+    def mark_written(self, rid: int, upto: int) -> None:
+        """Record that positions ``[0, upto)`` now hold K/V, committed or not
+        (the speculative verify step writes drafted positions eagerly)."""
+        if upto > self.reserved[rid]:
+            raise ValueError(
+                f"request {rid}: speculative write through position {upto} "
+                f"exceeds the admission reserve of {self.reserved[rid]}")
+        self.written[rid] = max(self.written[rid], upto)
+
+    def rollback(self, rid: int) -> int:
+        """Rewind the written high-water to the committed length, i.e. drop
+        the rejected drafted positions; returns how many were rolled back."""
+        rolled = self.written[rid] - self.lengths[rid]
+        assert rolled >= 0 and self.lengths[rid] >= self._prompt_len[rid]
+        self.written[rid] = self.lengths[rid]
+        self.rolled_back_total += rolled
+        return rolled
 
     def complete(self, rid: int) -> None:
         """Release the request's pages; a shared page survives until its last
@@ -191,3 +245,5 @@ class BlockAllocator:
         for pid in self.live.pop(rid):
             if self.pool.decref(pid) and self.prefix is not None:
                 self.prefix.evict_page(pid)
+        for d in (self.lengths, self.written, self.reserved, self._prompt_len):
+            d.pop(rid, None)

@@ -203,6 +203,33 @@ def make_paged_decode_step(model: Model) -> Callable:
     return paged_decode_step
 
 
+def make_verify_step(model: Model) -> Callable:
+    """verify_step(params, pages, tokens [B,S], positions [B,S], block_tables
+    [B,M]) -> (logits [B,S,V], pages).
+
+    The speculative-decode verifier: identical forward to
+    ``make_paged_decode_step`` (same paged reads/writes through the block
+    table) but returning logits at *every* position, so one batched
+    full-model step scores a drafted token run d_0..d_k written at positions
+    p..p+k.  ``logits[:, i]`` is the full model's next-token distribution
+    after the token at ``positions[:, i]`` -- the acceptance rule compares
+    ``argmax(logits[:, i])`` against the draft's proposal for position
+    ``p+i+1``, and the first disagreement's argmax doubles as the correction
+    token, which is what makes greedy speculative decoding lossless.
+    Right-padded rows carry ``positions == -1`` (writes routed to the null
+    page, attention fully masked); their logits are garbage and unread.
+    """
+    cfg = model.cfg
+
+    def verify_step(params, pages, tokens, positions, block_tables):
+        out = lm_lib.lm_forward(params, tokens, cfg, positions=positions,
+                                mode="decode", caches=pages,
+                                block_tables=block_tables)
+        return out["logits"], out["caches"]
+
+    return verify_step
+
+
 def init_train_state(model: Model, tc: TrainConfig, key: jax.Array):
     params = model.init(key)
     opt_state = adamw_init(params, tc)

@@ -267,7 +267,13 @@ def cache_specs(cfg: ModelConfig, batch: int, max_seq: int) -> Dict[str, Any]:
 
 def paged_cache_specs(cfg: ModelConfig, n_pages: int, page_size: int) -> Dict[str, Any]:
     """Whole-model page-pool specs: one ``[n_pages, page_size, ...]`` pool per
-    stacked layer leaf, shared across requests via per-request block tables."""
+    stacked layer leaf, shared across requests via per-request block tables.
+
+    Works for any config with attention-only mixers -- including the
+    *coalesced* level-1 config, which is how the speculative decode policy
+    builds its draft cache: ``paged_cache_specs(coalesce_config(cfg, ml),
+    ...)`` gives the half-width pool the drafted tokens stream through
+    (``launch/serve.py::SpeculativePolicy``)."""
     return {
         f"stage_{i}": {
             f"b{j}": _stack(paged_block_cache_specs(cfg, bsj, n_pages, page_size),
@@ -343,7 +349,12 @@ def lm_forward(
     img_embeds: Optional[jax.Array] = None,  # [B,N,E] (vlm stub frontend)
     enc_frames: Optional[jax.Array] = None,  # [B,T,E] (audio stub frontend)
     enc_out: Optional[jax.Array] = None,  # precomputed encoder output (decode)
-    block_tables: Optional[jax.Array] = None,  # [B,M]: decode caches are paged
+    # [B,M]: decode caches are paged.  S==1 is batched decode; S>1 with
+    # explicit positions is the multi-token paged step shared by the
+    # prefix-reuse "extend" path and the speculative verify step (logits at
+    # every position score a drafted run; positions == -1 mark padding --
+    # writes land on the null page and attention is fully masked).
+    block_tables: Optional[jax.Array] = None,
 ) -> Dict[str, Any]:
     B, S = tokens.shape
     if positions is None:

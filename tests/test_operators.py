@@ -144,3 +144,28 @@ def test_expert_coalescing_beyond_paper():
     want = jax.tree.map(lambda s: tuple(s.shape), struct_tree(small.specs()))
     got = jax.tree.map(lambda x: tuple(x.shape), co)
     assert got == want
+
+
+def test_draft_projection_is_the_level_transition():
+    """``make_draft_projection`` (the serving-time self-speculative draft)
+    must be exactly the level-1 Coalescing transition: same config as
+    ``coalesce_config``, same projected params as ``make_coalesce_fn`` --
+    and re-projecting after a weight change tracks the new weights (the
+    hot-reload contract ``EngineCore.set_params`` relies on)."""
+    cfg = tiny_dense(compute_dtype=jnp.float32)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    draft_cfg, project = ops.make_draft_projection(model.specs(), cfg, ML)
+    assert draft_cfg == ops.coalesce_config(cfg, ML)
+    want = ops.make_coalesce_fn(model.specs(), cfg, ML)(params)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                            np.asarray(b)),
+                 project(params), want)
+    # draft params are a pure function of the serving params: new weights in,
+    # new draft out (no per-instance state to invalidate)
+    p2 = jax.tree.map(lambda x: x * 2.0, params)
+    got2 = project(p2)
+    want2 = ops.make_coalesce_fn(model.specs(), cfg, ML)(p2)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                            np.asarray(b)),
+                 got2, want2)

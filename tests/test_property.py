@@ -280,3 +280,51 @@ def test_shared_prefix_page_freed_on_last_release(stem_pages, tail_a, tail_b):
     assert all(alloc.pool.refcount(p) == 0 for p in shared)  # last ref freed
     assert alloc.pool.n_used == 0
     assert len(alloc.prefix) == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(data=st.data())
+def test_speculative_length_protocol_invariants(data):
+    """The speculative advance/mark_written/rollback protocol over arbitrary
+    interleavings: committed length never exceeds the written high-water,
+    written never exceeds the admission reserve (page-safety of speculative
+    bursts), rollback always rewinds written to exactly the committed length
+    and accounts every rewound position, and over-reserve writes raise
+    instead of silently landing outside the block table."""
+    from repro.launch.paging import BlockAllocator
+
+    P = 4
+    alloc = BlockAllocator(64, P, prefix_reuse=False)
+    L = data.draw(st.integers(min_value=1, max_value=10), label="prompt_len")
+    max_new = data.draw(st.integers(min_value=1, max_value=12), label="max_new")
+    reserve = L + max_new
+    assert alloc.admit(0, [1] * L, reserve) is not None
+    rolled_expect = 0
+    for _ in range(data.draw(st.integers(1, 25), label="n_ops")):
+        op = data.draw(st.sampled_from(["advance", "mark", "rollback"]), label="op")
+        if op == "advance":
+            n = data.draw(st.integers(1, 4), label="n")
+            if alloc.lengths[0] + n > reserve:
+                with pytest.raises(ValueError, match="exceeds the admission reserve"):
+                    alloc.advance(0, n)
+            else:
+                alloc.advance(0, n)
+        elif op == "mark":
+            k = data.draw(st.integers(1, 6), label="k")
+            upto = alloc.lengths[0] + k
+            if upto > reserve:
+                with pytest.raises(ValueError, match="exceeds the admission reserve"):
+                    alloc.mark_written(0, upto)
+            else:
+                alloc.mark_written(0, upto)
+        else:
+            rolled_expect += alloc.written[0] - alloc.lengths[0]
+            alloc.rollback(0)
+            assert alloc.written[0] == alloc.lengths[0]
+        assert L <= alloc.lengths[0] <= alloc.written[0] <= reserve
+    rolled_expect += alloc.written[0] - alloc.lengths[0]
+    alloc.rollback(0)
+    assert alloc.rolled_back_total == rolled_expect
+    alloc.complete(0)
+    assert 0 not in alloc.lengths and 0 not in alloc.written
+    assert alloc.pool.n_used == 0

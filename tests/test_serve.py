@@ -3,13 +3,24 @@ the continuous-batching lifecycle (admit -> decode -> slot/pages free on
 length budget -> re-prefill into the freed capacity), the oversized-prompt
 guards, and the paged engine's extra contracts -- token-for-token greedy
 equivalence with the slot oracle (prefix reuse on and off), page-pool
-admission/exhaustion behavior, and zero leaked pages after a drain."""
+admission/exhaustion behavior, and zero leaked pages after a drain.
+
+The decode-policy suite at the bottom pins the speculative contract: the
+coalesced level-1 draft may be arbitrarily wrong (random weights, or a
+sabotaged draft that disagrees on the first token of every round) and the
+emitted stream must STILL be token-for-token identical to greedy decode,
+with rejected positions rewound through the allocator's rollback protocol."""
+import jax
 import numpy as np
 import pytest
 
 from helpers import tiny_dense, tiny_mla
+from repro.config import MultiLevelConfig
 from repro.configs import get_config
-from repro.launch.serve import PagedServer, Request, Server, make_server
+from repro.core import operators as ops
+from repro.launch.serve import (EngineCore, PagedServer, Request, Server,
+                                SpeculativePolicy, make_server)
+from repro.models.api import build_model
 
 
 @pytest.fixture(scope="module")
@@ -209,3 +220,152 @@ def test_reset_reuses_compiled_steps():
     assert srv.done == [] and srv.alloc.pool.n_used == 0
     again = srv.run([Request(rid=1, prompt=np.arange(6, dtype=np.int64), max_new=3)])
     assert again[0].out == out0  # same prompt, same params -> same tokens
+
+
+# ---------------------------------------------------------------------------
+# decode policies: scheduler/policy split + speculative losslessness
+
+
+def test_engines_share_scheduler_core():
+    """The refactor's structural contract: admission, the run loop, token
+    commit and reset live on ``EngineCore`` ONCE -- neither engine overrides
+    them (engines only customize placement/retirement/decode hooks)."""
+    for meth in ("fits", "admit", "run", "reset", "commit", "step", "set_params"):
+        assert getattr(Server, meth) is getattr(EngineCore, meth)
+        assert getattr(PagedServer, meth) is getattr(EngineCore, meth)
+
+
+def test_make_server_rejects_unknown_engine_and_policy():
+    cfg = tiny_dense(compute_dtype="float32")
+    with pytest.raises(ValueError, match="unknown engine"):
+        make_server(cfg, engine="vllm")
+    with pytest.raises(ValueError, match="unknown policy"):
+        make_server(cfg, engine="paged", policy="beam")
+    with pytest.raises(TypeError, match="policy must be"):
+        make_server(cfg, engine="paged", policy=42)
+    with pytest.raises(NotImplementedError, match="paged engine"):
+        make_server(cfg, engine="slots", policy="speculative")
+
+
+def _greedy_oracle(cfg, reqs, **kw):
+    srv = make_server(cfg, engine="paged", policy="greedy", **kw)
+    done = srv.run(reqs)
+    return {r.rid: r.out for r in done}
+
+
+@pytest.mark.parametrize("prefix_reuse", [True, False])
+def test_speculative_matches_greedy_token_for_token(prefix_reuse):
+    """Random-init weights: the coalesced draft is essentially an unrelated
+    model (accept rate ~0), the hardest losslessness stress -- every emitted
+    token must still be the full model's argmax, so the stream is identical
+    to greedy decode and to the slots oracle.  Rollback fires constantly and
+    the pool must still drain clean."""
+    cfg = tiny_dense(compute_dtype="float32")
+    kw = dict(batch=3, max_seq=48, page_size=8, prefix_reuse=prefix_reuse)
+    greedy = _greedy_oracle(cfg, _request_mix(cfg.vocab_size), **kw)
+    srv = make_server(cfg, engine="paged", policy="speculative", draft_k=3, **kw)
+    done = srv.run(_request_mix(cfg.vocab_size))
+    assert {r.rid: r.out for r in done} == greedy
+    st = srv.stats()
+    assert st["drafted_tokens"] > 0
+    assert st["rolled_back_positions"] > 0  # rejections actually rolled back
+    assert srv.alloc.pool.n_used == 0  # drained clean despite rollbacks
+    if prefix_reuse:
+        assert srv.prefill_tokens_saved > 0  # reuse intact under speculation
+
+
+def test_speculative_matches_greedy_mla():
+    """Losslessness holds for the MLA (compressed-latent) paged layout too."""
+    cfg = tiny_mla(compute_dtype="float32")
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in (5, 9, 12)]
+    reqs = lambda: [Request(rid=i, prompt=p, max_new=5)
+                    for i, p in enumerate(prompts)]
+    kw = dict(batch=2, max_seq=32, page_size=4)
+    greedy = _greedy_oracle(cfg, reqs(), **kw)
+    srv = make_server(cfg, engine="paged", policy="speculative", draft_k=3, **kw)
+    assert {r.rid: r.out for r in srv.run(reqs())} == greedy
+
+
+def _width_consistent_params(cfg, ml):
+    """decoalesce(width-only)(level-1 init): serving weights whose coalesced
+    draft is function-identical to the full model (tests/test_operators.py
+    pins the exact preservation)."""
+    model = build_model(cfg)
+    small_cfg = ops.coalesce_config(cfg, ml, width=True, depth=False)
+    p_small = build_model(small_cfg).init(jax.random.PRNGKey(3))
+    return ops.make_decoalesce_fn(model.specs(), cfg, ml,
+                                  width=True, depth=False)(p_small)
+
+
+def test_speculative_full_accept_on_consistent_params():
+    """Projection-consistent weights via ``set_params`` (the hot-reload +
+    draft-refresh path): the width-only draft agrees with the full model, so
+    near-all drafted tokens are accepted, nothing rolls back, and the stream
+    still matches greedy on the same weights."""
+    cfg = tiny_dense(compute_dtype="float32", qk_norm=False, tie_embeddings=False)
+    ml = MultiLevelConfig()
+    p = _width_consistent_params(cfg, ml)
+    rng = np.random.default_rng(11)
+    reqs = lambda: [Request(rid=i, prompt=rng2, max_new=8)
+                    for i, rng2 in enumerate(
+                        rng.integers(0, cfg.vocab_size, size=(4, 7)))]
+    fixed = reqs()
+    kw = dict(batch=2, max_seq=48, page_size=8)
+    gsrv = make_server(cfg, engine="paged", **kw)
+    gsrv.set_params(p)
+    greedy = {r.rid: r.out for r in gsrv.run([Request(r.rid, r.prompt, r.max_new)
+                                              for r in fixed])}
+    pol = SpeculativePolicy(k=4, ml=ml, draft_width=True, draft_depth=False)
+    srv = make_server(cfg, engine="paged", policy=pol, **kw)
+    srv.set_params(p)  # must re-project the draft (on_params), or accept ~0
+    done = srv.run([Request(r.rid, r.prompt, r.max_new) for r in fixed])
+    assert {r.rid: r.out for r in done} == greedy
+    st = srv.stats()
+    assert st["accept_rate"] > 0.9
+    assert st["accepted_tokens"] > 0
+
+
+def test_speculative_forced_rejection_rolls_back():
+    """Sabotage the draft so it disagrees with the full model on the FIRST
+    drafted token of every round (consistent weights make the honest draft
+    argmax equal the full model's; +1 mod vocab then guarantees mismatch).
+    Every round must reject at token 1, rewind its drafted positions through
+    ``BlockAllocator.rollback``, and still emit the exact greedy stream."""
+    cfg = tiny_dense(compute_dtype="float32", qk_norm=False, tie_embeddings=False)
+    ml = MultiLevelConfig()
+    p = _width_consistent_params(cfg, ml)
+    rng = np.random.default_rng(13)
+    prompts = rng.integers(0, cfg.vocab_size, size=(3, 6))
+    reqs = lambda: [Request(rid=i, prompt=pr, max_new=6)
+                    for i, pr in enumerate(prompts)]
+    kw = dict(batch=2, max_seq=32, page_size=8)
+    gsrv = make_server(cfg, engine="paged", **kw)
+    gsrv.set_params(p)
+    greedy = {r.rid: r.out for r in gsrv.run(reqs())}
+    pol = SpeculativePolicy(k=3, ml=ml, draft_width=True, draft_depth=False)
+    honest = pol._draft_argmax
+    pol._draft_argmax = lambda logits: (honest(logits) + 1) % cfg.vocab_size
+    srv = make_server(cfg, engine="paged", policy=pol, **kw)
+    srv.set_params(p)
+    done = srv.run(reqs())
+    assert {r.rid: r.out for r in done} == greedy  # lossless under 100% rejection
+    st = srv.stats()
+    assert st["drafted_tokens"] > 0
+    assert st["accept_rate"] <= 0.05  # near-ties may flake a single argmax
+    assert srv.alloc.rolled_back_total > 0
+    assert srv.alloc.pool.n_used == 0
+
+
+def test_speculative_reset_and_reuse():
+    """reset() must rebuild the draft pool/allocator alongside the main one
+    and keep the compiled draft/verify steps usable (bench warmup contract)."""
+    cfg = tiny_dense(compute_dtype="float32")
+    srv = make_server(cfg, engine="paged", policy="speculative", draft_k=2,
+                      batch=2, max_seq=32, page_size=8)
+    first = srv.run([Request(rid=0, prompt=np.arange(6, dtype=np.int64), max_new=3)])
+    out0 = list(first[0].out)
+    srv.reset()
+    assert srv.stats()["spec_rounds"] == 0  # policy stats cleared too
+    again = srv.run([Request(rid=1, prompt=np.arange(6, dtype=np.int64), max_new=3)])
+    assert again[0].out == out0
