@@ -288,6 +288,7 @@ class CheckpointManager:
         #: per-save dedup accounting of THIS process's most recent v3 save:
         #: {bytes,objects}_{written,reused} (reused = content-addressed hits)
         self.last_save_stats: Dict[str, int] = {}
+        self.last_gather_stats: Dict[str, int] = {}
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._save_seq = 0  # barrier-name uniquifier (same sequence on every process)
@@ -335,8 +336,9 @@ class CheckpointManager:
         all still held somewhere is ``_gather_objects``' job, which fails
         loudly rather than restarting from scratch.
         """
-        from repro.distributed import (barrier, kv_allgather, kv_delete,
-                                       kv_fetch, kv_put)
+        from repro.distributed import (barrier, kv_allgather,
+                                       kv_delete_stream, kv_fetch_stream,
+                                       kv_put_stream)
 
         pid, n = jax.process_index(), jax.process_count()
         self._kv_seq += 1
@@ -353,15 +355,16 @@ class CheckpointManager:
             return None
         step, d, winner = max(ranked)
         best = cands[winner]
-        # round 2: the winner ships its manifest; everyone else fetches
+        # round 2: the winner ships its manifest (streamed -- a large model's
+        # manifest is itself MBs of digests); everyone else fetches
         if pid == winner:
             trees = store_lib.read_step_manifest(os.path.join(self.dir, d))
-            kv_put(f"{tag}-best", json.dumps(trees).encode())
+            kv_put_stream(f"{tag}-best", json.dumps(trees).encode())
         else:
-            trees = json.loads(kv_fetch(f"{tag}-best"))
+            trees = json.loads(kv_fetch_stream(f"{tag}-best"))
         barrier(f"{tag}-done")
         if pid == 0:
-            kv_delete(f"{tag}-best")
+            kv_delete_stream(f"{tag}-best")
         if trees is not None:
             # processes without the step dir on local disk (fresh dir, fewer
             # or more hosts than at save time) restore from this broadcast
@@ -673,8 +676,9 @@ class CheckpointManager:
         if m is None:
             return None, None
         trees = self._step_trees(m)
+        needed = self._needed_digests(trees, like_state, shardings)
         if trees is not None and self.local and jax.process_count() > 1:
-            self._gather_objects(trees)
+            self._gather_objects(trees, needed=needed)
         base = os.path.join(self.dir, m["dir"])
         out = {}
         for key, like in like_state.items():
@@ -683,39 +687,74 @@ class CheckpointManager:
                 # the manifest may have arrived over the KV broadcast (local
                 # dirs), so resolve digests directly rather than via a path
                 out[key] = _land_tree(
-                    store_lib.assemble_tree(trees.get(key, {}), self._pools()),
+                    store_lib.assemble_tree(trees.get(key, {}), self._pools(),
+                                            needed=needed),
                     like, sh)
             else:
                 out[key] = restore_tree(os.path.join(base, key), like, sh,
                                         pools=self._pools())
         return out, m.get("meta", {})
 
-    def _gather_objects(self, trees: Dict[str, Any]) -> None:
-        """No-shared-FS restore protocol: fetch every manifest digest this
-        process is missing from whichever peer holds it.
+    def _needed_digests(self, trees, like_state, shardings):
+        """Digest set this rank's restore actually touches, or None (= all).
+
+        Sharding-aware pruning: a leaf restored into a sharded target only
+        reads the chunks intersecting slices this process's devices address
+        (``make_array_from_callback`` never reads the rest), so peers don't
+        ship them and ``assemble_tree`` doesn't fetch them.  Leaves restored
+        WITHOUT a sharding (plain ``device_put``) read their full extent and
+        stay fully needed -- as do fully-addressable targets, where every
+        slice is local anyway.
+        """
+        if trees is None or not shardings:
+            return None
+        needed: set = set()
+        for key in like_state:
+            entries = trees.get(key, {})
+            sh = shardings.get(key)
+            flat_sh = _flatten(sh) if sh is not None else {}
+            # only prune leaves landing on multi-process shardings; a
+            # fully-addressable sharding device_puts the whole host array
+            flat_sh = {k: s for k, s in flat_sh.items()
+                       if getattr(s, "is_fully_addressable", True) is False}
+            needed |= store_lib.needed_digests(entries, flat_sh)
+        return needed
+
+    def _gather_objects(self, trees: Dict[str, Any],
+                        needed: Optional[set] = None) -> None:
+        """No-shared-FS restore protocol: fetch the manifest digests this
+        process needs but is missing from whichever peer holds them.
 
         Rounds (all over the coordination-service KV store, tiny JSON +
-        object bytes): (1) every process publishes its have/want lists for
-        the manifest's digest set; (2) each wanted digest is served by the
-        LOWEST rank holding it (deterministic single writer); (3) wanters
-        fetch and cache the bytes into their own pool (so the next save
-        dedups against them).  Raises if a digest is held by no process.
+        chunked object streams): (1) every process publishes its have/want
+        lists -- have covers ALL held manifest digests (so it can serve any
+        peer), want is the digests it needs (``needed``, when given, prunes
+        this to the slices the rank's restore shardings address) and lacks;
+        (2) each wanted digest is served by the LOWEST rank holding it
+        (deterministic single writer), streamed in bounded chunks so a big
+        leaf never lands in coordinator RAM whole; (3) wanters fetch and
+        cache the bytes into their own pool (so the next save dedups against
+        them).  Raises if a wanted digest is held by no process.
         """
-        from repro.distributed import (barrier, kv_allgather, kv_delete,
-                                       kv_fetch, kv_put)
+        from repro.distributed import (barrier, kv_allgather,
+                                       kv_delete_stream, kv_fetch_stream,
+                                       kv_put_stream)
 
         pid, n = jax.process_index(), jax.process_count()
         self._kv_seq += 1
         tag = f"{self._scope}-gather-{self._kv_seq}"
         pools = self._pools()
-        needed = sorted(set(store_lib.manifest_digests(trees)))
-        have = [d for d in needed if any(p.has(d) for p in pools)]
-        want = sorted(set(needed) - set(have))
+        all_digests = sorted(set(store_lib.manifest_digests(trees)))
+        have = [d for d in all_digests if any(p.has(d) for p in pools)]
+        mine = all_digests if needed is None else sorted(
+            set(all_digests) & set(needed))
+        want = sorted(set(mine) - set(have))
         lists = [json.loads(p) for p in kv_allgather(
             f"{tag}-lists", json.dumps({"have": have, "want": want}).encode())]
         haves = {r: set(lists[r]["have"]) for r in range(n)}
         wanted = sorted(set().union(*[set(lists[r]["want"])
                                       for r in range(n)]))
+        served = 0
         for d in wanted:
             owner = next((r for r in range(n) if d in haves[r]), None)
             if owner is None:
@@ -725,14 +764,15 @@ class CheckpointManager:
                     f"(a writer host's local dir is gone?)")
             if owner == pid:
                 payload = next(p.get_bytes(d) for p in pools if p.has(d))
-                kv_put(f"{tag}-obj-{d}", payload)
+                kv_put_stream(f"{tag}-obj-{d}", payload)
+                served += 1
         # the manifest knows each digest's true dtype (npy round-trips
         # ml_dtypes as raw void bytes, which would re-hash differently)
         dtype_of = {ch["digest"]: rec.get("dtype")
                     for entries in trees.values()
                     for rec in entries.values() for ch in rec["chunks"]}
         for d in want:
-            payload = kv_fetch(f"{tag}-obj-{d}")
+            payload = kv_fetch_stream(f"{tag}-obj-{d}")
             # verify BEFORE caching: a content-addressed pool that trusts
             # transferred bytes makes a corrupt transfer sticky -- every
             # later save would dedup against the poisoned object
@@ -742,10 +782,14 @@ class CheckpointManager:
                     f"checkpoint object {d} arrived corrupt from its peer "
                     f"(payload hashes to {got}); refusing to cache it")
             self.store.put_bytes(d, payload)
+        self.last_gather_stats = {
+            "manifest": len(all_digests), "needed": len(mine),
+            "skipped": len(all_digests) - len(mine), "held": len(have),
+            "fetched": len(want), "served": served}
         barrier(f"{tag}-done")
         if pid == 0:
             # the object payloads are the big entries -- a full elastic
             # restore parks the whole checkpoint in coordinator RAM until
             # this sweep reclaims it
             for d in wanted:
-                kv_delete(f"{tag}-obj-{d}")
+                kv_delete_stream(f"{tag}-obj-{d}")

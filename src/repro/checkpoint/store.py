@@ -230,6 +230,65 @@ def manifest_digests(trees: Dict[str, Dict[str, Any]]) -> Iterator[str]:
                 yield ch["digest"]
 
 
+def np_dtype(name: Optional[str]) -> np.dtype:
+    """np.dtype for a manifest dtype name, resolving ml_dtypes extension
+    types (``"bfloat16"``) that ``np.dtype`` alone rejects."""
+    if name is None:
+        return np.dtype(np.float32)
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def chunk_intersects(start, shape, indices, global_shape) -> bool:
+    """True when the chunk hyperrect ``[start, start+shape)`` overlaps ANY of
+    the index tuples in ``indices`` (tuples of slices into ``global_shape``,
+    as returned by ``Sharding.addressable_devices_indices_map``).
+
+    The geometry behind sharding-aware restore: a rank only needs the chunks
+    whose bytes land inside some slice its devices address.
+    """
+    for idx in indices:
+        hit = True
+        for sl, st, sz, dim in zip(idx, start, shape, global_shape):
+            lo, hi, _ = sl.indices(dim)
+            if hi <= st or lo >= st + sz:
+                hit = False
+                break
+        if hit:  # 0-d leaves have empty index tuples and always intersect
+            return True
+    return False
+
+
+def needed_digests(entries: Dict[str, Dict[str, Any]],
+                   leaf_shardings: Dict[str, Any]) -> set:
+    """Digests of the chunks whose slices this process's shardings address.
+
+    ``leaf_shardings`` maps leaf path -> target jax Sharding (missing leaves
+    are treated as fully needed).  This is what lets a no-shared-FS restore
+    fetch only a rank's own slices instead of every manifest digest.
+    """
+    need: set = set()
+    for leaf, rec in entries.items():
+        sh = leaf_shardings.get(leaf)
+        if sh is None:
+            need.update(ch["digest"] for ch in rec["chunks"])
+            continue
+        shape = tuple(rec["shape"])
+        try:
+            idxs = list(sh.addressable_devices_indices_map(shape).values())
+        except Exception:  # unknown sharding type: fall back to everything
+            need.update(ch["digest"] for ch in rec["chunks"])
+            continue
+        for ch in rec["chunks"]:
+            if chunk_intersects(ch["start"], ch["shape"], idxs, shape):
+                need.add(ch["digest"])
+    return need
+
+
 def fetch_object(digest: str, pools: List[ObjectStore],
                  dtype: Optional[str] = None) -> np.ndarray:
     """Resolve ``digest`` through an ordered pool list (own dir first, then
@@ -244,12 +303,26 @@ def fetch_object(digest: str, pools: List[ObjectStore],
 
 
 def assemble_tree(entries: Dict[str, Dict[str, Any]],
-                  pools: List[ObjectStore]) -> Dict[str, np.ndarray]:
+                  pools: List[ObjectStore],
+                  needed: Optional[set] = None) -> Dict[str, np.ndarray]:
     """Logical host arrays of one tree from its manifest entries + pools
-    (inverse of chunking, whatever mesh/process count wrote the chunks)."""
+    (inverse of chunking, whatever mesh/process count wrote the chunks).
+
+    With ``needed`` (a digest set from :func:`needed_digests`), chunks
+    outside the set are never fetched; their regions of the host array stay
+    uninitialized.  Only valid when the caller lands the result through the
+    same shardings the set was computed from -- ``make_array_from_callback``
+    then reads exactly the addressable slices, which the set covers.
+    """
     flat: Dict[str, np.ndarray] = {}
     for leaf, rec in entries.items():
         chunks = rec["chunks"]
+        if needed is not None:
+            chunks = [ch for ch in chunks if ch["digest"] in needed]
+        if not chunks:  # no slice of this leaf is addressable here
+            flat[leaf] = np.empty(tuple(rec["shape"]),
+                                  dtype=np_dtype(rec.get("dtype")))
+            continue
         first = fetch_object(chunks[0]["digest"], pools, rec.get("dtype"))
         if len(chunks) == 1 and list(first.shape) == list(rec["shape"]):
             flat[leaf] = first

@@ -268,6 +268,13 @@ class VCycleState:
     cum_flops: float = 0.0
     history: History = dataclasses.field(default_factory=History)
     params_before: Dict[int, Any] = dataclasses.field(default_factory=dict)
+    # carried gradient-reduction state (EF residuals) for the CURRENT level's
+    # shapes; None when the strategy is stateless or not yet initialized.
+    # Reset (not re-projected) at level transitions: the residual is bounded
+    # by half a quantization step and the optimizer re-initializes there
+    # anyway, so dropping it introduces no bias -- re-projecting sub-ULP
+    # noise through the coalesce operators would be complexity for nothing.
+    ef: Any = None
 
 
 class VCycleRunner:
@@ -297,7 +304,7 @@ class VCycleRunner:
                  batch_fn: Callable[[int], Dict[str, jax.Array]], *,
                  seed: int = 0, target_loss: Optional[float] = None,
                  final_steps: Optional[int] = None, verbose: bool = False,
-                 mesh=None, drain_flag=None):
+                 mesh=None, drain_flag=None, grad_reduce=None):
         self.ml, self.tc, self.batch_fn = ml, tc, batch_fn
         self.seed, self.target_loss, self.verbose = seed, target_loss, verbose
         self.mesh = mesh
@@ -305,6 +312,16 @@ class VCycleRunner:
         # INSIDE each level's compiled step (one extra tiny input + metrics
         # scalar) instead of a dedicated per-step process_allgather
         self.drain_flag = drain_flag if mesh is not None else None
+        # pluggable gradient reduction (distributed/reduce.py): pass a strategy
+        # explicitly or let tc.grad_compression name one; either way the
+        # per-level steps become shard_map'd with the reduction injected
+        if grad_reduce is None and mesh is not None:
+            from repro.distributed import make_grad_reduce
+
+            grad_reduce = make_grad_reduce(tc.grad_compression, mesh)
+        if grad_reduce is not None and mesh is None:
+            raise ValueError("grad_reduce requires a mesh")
+        self.grad_reduce = grad_reduce
         self.cfgs = [cfg]
         for _ in range(ml.n_levels - 1):
             self.cfgs.append(ops.coalesce_config(self.cfgs[-1], ml))
@@ -331,6 +348,15 @@ class VCycleRunner:
             self._shardings[level] = got
         return got
 
+    def ef_shardings(self, level: int):
+        """NamedSharding tree for the grad-reduce carried state at ``level``
+        (None when the strategy is absent or stateless)."""
+        gr = self.grad_reduce
+        if gr is None or not gr.stateful or self.mesh is None:
+            return None
+        psh, _ = self.level_shardings(level)
+        return gr.state_shardings(psh, self.mesh)
+
     def batch_shardings(self):
         """Data-parallel shardings for ``batch_fn``'s pytree (None w/o mesh)."""
         if self.mesh is None:
@@ -346,10 +372,21 @@ class VCycleRunner:
         return self._batch_sh
 
     def step_fn(self, level: int) -> Callable:
-        """The compiled train step for ``level`` (built once, then cached)."""
+        """The compiled train step for ``level`` (built once, then cached).
+
+        With a ``grad_reduce`` strategy the underlying step is the 4-ary
+        shard_map'd one (params, opt, ef, batch); the runner wraps it back to
+        the loop's 3-ary shape by threading ``self.state.ef`` through, so the
+        segment loop, logging and checkpoint cadence stay strategy-agnostic.
+        """
         fn = self._step_fns.get(level)
         if fn is None:
-            step = make_train_step(self.models[level], self.tc)
+            if self.grad_reduce is not None:
+                step = make_train_step(self.models[level], self.tc,
+                                       grad_reduce=self.grad_reduce,
+                                       mesh=self.mesh)
+            else:
+                step = make_train_step(self.models[level], self.tc)
             if self.mesh is None:
                 fn = jax.jit(step, donate_argnums=(0, 1))
             else:
@@ -359,7 +396,26 @@ class VCycleRunner:
                 # metrics are explicitly replicated: the host loss fetch
                 # (float()) must work on every process of a multi-process mesh
                 rep = NamedSharding(self.mesh, PartitionSpec())
-                if self.drain_flag is not None:
+                if self.grad_reduce is not None:
+                    efsh = self.ef_shardings(level)
+                    if self.drain_flag is not None:
+                        fn4 = self.drain_flag.wrap_step(
+                            step,
+                            in_shardings=(psh, osh, efsh, self.batch_shardings()),
+                            out_shardings=(psh, osh, efsh, rep),
+                            donate_argnums=(0, 1, 2))
+                    else:
+                        fn4 = jax.jit(
+                            step,
+                            in_shardings=(psh, osh, efsh, self.batch_shardings()),
+                            out_shardings=(psh, osh, efsh, rep),
+                            donate_argnums=(0, 1, 2))
+
+                    def fn(p, o, b, _fn4=fn4):
+                        st = self.state
+                        p, o, st.ef, m = _fn4(p, o, st.ef, b)
+                        return p, o, m
+                elif self.drain_flag is not None:
                     fn = self.drain_flag.wrap_step(
                         step,
                         in_shardings=(psh, osh, self.batch_shardings()),
@@ -399,6 +455,16 @@ class VCycleRunner:
         like = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype),
                             params)
         return put_global_tree(adamw_init(like, self.tc), osh)
+
+    def _init_ef(self, level: int, params):
+        """Zero grad-reduce state for ``level`` (None for stateless/absent
+        strategies), laid out on the mesh shard-wise like ``_init_opt``."""
+        gr = self.grad_reduce
+        if gr is None or not gr.stateful:
+            return None
+        from repro.distributed import put_global_tree
+
+        return put_global_tree(gr.init_state(params), self.ef_shardings(level))
 
     def _transition(self, state: VCycleState, plan: SegmentPlan, params):
         """Apply the post-segment operator (Alg. 1 lines 3-4 / 7-9); with a
@@ -452,6 +518,8 @@ class VCycleRunner:
             fn = self.step_fn(plan.level)
             if opt_state is None:  # re-init at transitions (paper App. C)
                 opt_state = self._init_opt(plan.level, params)
+            if state.ef is None:  # fresh zeros per level (see VCycleState.ef)
+                state.ef = self._init_ef(plan.level, params)
             fps = flops_lib.train_step_flops(
                 self.cfgs[plan.level], self.specs[plan.level],
                 tc.batch_size, tc.seq_len)
@@ -480,6 +548,9 @@ class VCycleRunner:
             state.seg_index += 1
             state.seg_step = 0
             opt_state = None
+            # EF residuals are level-shaped; reset across the transition (the
+            # next segment re-zeros them -- see the VCycleState.ef rationale)
+            state.ef = None
         return VCycleOutput(params=params, history=state.history,
                             configs=self.cfgs, total_flops=state.cum_flops)
 

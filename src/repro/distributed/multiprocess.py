@@ -113,6 +113,61 @@ def kv_delete(key: str) -> None:
         pass
 
 
+def _kv_chunk_bytes() -> int:
+    """Max bytes per KV message (env-tunable; tests shrink it to force
+    multi-part streams)."""
+    import os
+
+    return max(1, int(os.environ.get("REPRO_KV_CHUNK_BYTES", 2 * 1024 * 1024)))
+
+
+# Every stream message is prefixed so it can never be shorter than 2 bytes:
+# this jaxlib's coordination service SEGFAULTS the whole job on a blocking
+# get of a 1-byte value (empirically: 1-byte crashes, >=2 bytes are fine).
+_STREAM_PREFIX = b"P:"
+
+
+def kv_put_stream(key: str, payload: bytes) -> None:
+    """Publish arbitrarily large bytes under ``key`` as bounded chunks.
+
+    The coordination service rides gRPC, whose default message cap is ~4MB --
+    one-message-per-leaf-chunk (`kv_put`) breaks on large checkpoint leaves.
+    Payloads are split into ``REPRO_KV_CHUNK_BYTES``-sized parts
+    (``{key}/part{i}``); the part count lands LAST under ``{key}/meta``, so a
+    blocked :func:`kv_fetch_stream` that sees the meta is guaranteed every
+    part is already published.
+    """
+    chunk = _kv_chunk_bytes()
+    n = max(1, -(-len(payload) // chunk))
+    for i in range(n):
+        kv_put(f"{key}/part{i}",
+               _STREAM_PREFIX + payload[i * chunk:(i + 1) * chunk])
+    kv_put(f"{key}/meta", f"n={n}".encode())
+
+
+def kv_fetch_stream(key: str, timeout_ms: int = _BARRIER_TIMEOUT_MS) -> bytes:
+    """Block until :func:`kv_put_stream` publishes ``key``; reassembles the
+    parts in order."""
+    meta = kv_fetch(f"{key}/meta", timeout_ms)
+    n = int(meta.decode().split("=", 1)[1])
+    return b"".join(kv_fetch(f"{key}/part{i}", timeout_ms)[len(_STREAM_PREFIX):]
+                    for i in range(n))
+
+
+def kv_delete_stream(key: str) -> None:
+    """Best-effort cleanup of a streamed key (same contract as
+    :func:`kv_delete`: call only after consumers are provably past their
+    fetches)."""
+    try:
+        meta = kv_fetch(f"{key}/meta", timeout_ms=1000)
+        n = int(meta.decode().split("=", 1)[1])
+    except Exception:
+        return
+    for i in range(n):
+        kv_delete(f"{key}/part{i}")
+    kv_delete(f"{key}/meta")
+
+
 def kv_allgather(tag: str, payload: bytes,
                  timeout_ms: int = _BARRIER_TIMEOUT_MS) -> list:
     """Every process contributes ``payload`` under ``tag``; returns the list
@@ -271,29 +326,32 @@ class FusedDrainFlag:
 
     def wrap_step(self, step, *, in_shardings, out_shardings,
                   donate_argnums=(0, 1)):
-        """jit ``step(params, opt, batch) -> (params, opt, metrics)`` with the
+        """jit an n-ary ``step(*state, batch) -> (*state, metrics)`` with the
         drain flag fused in: the compiled step takes the flag as an extra
         input, emits the replicated ``metrics["drain"]`` scalar, and the
         returned wrapper feeds/observes it transparently -- call sites keep
-        the plain 3-argument signature.  Both drivers share this wiring."""
+        the step's own signature.  Both drivers share this wiring (the
+        classic step is 3-ary; the grad-reduce step threads its EF state as a
+        4th state leg)."""
 
-        def fused(params, opt_state, batch, flag):
-            p, o, m = step(params, opt_state, batch)
+        def fused(*args):
+            *inputs, flag = args
+            *outs, m = step(*inputs)
             m = dict(m)
             # the cross-process preemption OR rides the step's own
             # collective schedule (no dedicated per-step allgather)
             m["drain"] = self.reduce(flag)
-            return p, o, m
+            return (*outs, m)
 
         compiled = jax.jit(fused,
                            in_shardings=(*in_shardings, self.sharding),
                            out_shardings=out_shardings,
                            donate_argnums=donate_argnums)
 
-        def fn(params, opt_state, batch):
-            p, o, m = compiled(params, opt_state, batch, self.device_flag())
-            self.observe(m["drain"])
-            return p, o, m
+        def fn(*args):
+            out = compiled(*args, self.device_flag())
+            self.observe(out[-1]["drain"])
+            return out
 
         return fn
 

@@ -173,6 +173,23 @@ def current_mesh() -> Optional[Mesh]:
     return _CTX["mesh"]
 
 
+@contextlib.contextmanager
+def no_constraints():
+    """Suspend ``shard_l`` constraints (trace-time).
+
+    Inside a ``shard_map`` body the mesh axes are already bound manually, so
+    GSPMD sharding constraints are meaningless (and jax rejects
+    with_sharding_constraint against the same mesh's axes there).  The
+    shard_map'd train step wraps its forward/backward in this.
+    """
+    prev = (_CTX["mesh"], _CTX["rules"])
+    _CTX["mesh"], _CTX["rules"] = None, None
+    try:
+        yield
+    finally:
+        _CTX["mesh"], _CTX["rules"] = prev
+
+
 def shard_l(x: jax.Array, axes: Sequence[str], overrides: Optional[Dict] = None) -> jax.Array:
     """Apply a logical sharding constraint; no-op outside a mesh context."""
     mesh = _CTX["mesh"]

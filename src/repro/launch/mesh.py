@@ -28,16 +28,23 @@ from typing import Optional, Tuple
 import jax
 
 
-def parse_mesh_arg(spec: str) -> Tuple[int, int]:
-    """``"DxM"`` -> (data, model), e.g. ``"2x4"`` -> (2, 4)."""
+def parse_mesh_arg(spec: str) -> Tuple[int, ...]:
+    """``"DxM"`` -> (data, model); ``"PxDxM"`` -> (pod, data, model).
+
+    The 3-dim form adds a leading DCN "pod" axis (data parallelism across
+    pods), which is what the hierarchical gradient-reduction strategies key
+    on: dense within ("data",) ICI, compressed across "pod".
+    """
     try:
-        d, m = (int(p) for p in spec.lower().split("x"))
+        dims = tuple(int(p) for p in spec.lower().split("x"))
     except ValueError:
         raise ValueError(
-            f"--mesh expects DxM (e.g. 2x4), got {spec!r}") from None
-    if d < 1 or m < 1:
-        raise ValueError(f"--mesh axes must be >= 1, got {spec!r}")
-    return d, m
+            f"--mesh expects DxM or PxDxM (e.g. 2x4 or 2x2x1), "
+            f"got {spec!r}") from None
+    if len(dims) not in (2, 3) or any(d < 1 for d in dims):
+        raise ValueError(
+            f"--mesh expects 2 or 3 axes >= 1 (DxM or PxDxM), got {spec!r}")
+    return dims
 
 
 def _force_host_device_flag(n: int) -> None:
@@ -113,7 +120,9 @@ def init_distributed(coordinator: str, num_processes: int, process_id: int,
 
 
 def make_cli_mesh(spec: str, *, num_processes: int = 1):
-    """("data", "model") mesh for the launcher's ``--mesh DxM`` flag.
+    """Mesh for the launcher's ``--mesh`` flag: ("data", "model") for ``DxM``,
+    ("pod", "data", "model") for ``PxDxM`` (a leading DCN axis for the
+    hierarchical gradient-reduction strategies).
 
     CPU-backed for tests/smoke: each process's host devices are forced to its
     d*m/num_processes share before the first backend initialization, so
@@ -123,8 +132,10 @@ def make_cli_mesh(spec: str, *, num_processes: int = 1):
     devices (process-major device order, so a 2x1 mesh puts process 0 at data
     coordinate 0).
     """
-    d, m = parse_mesh_arg(spec)
-    total = d * m
+    dims = parse_mesh_arg(spec)
+    total = 1
+    for d in dims:
+        total *= d
     if total % num_processes:
         raise ValueError(
             f"--mesh {spec} has {total} devices, not divisible over "
@@ -134,7 +145,8 @@ def make_cli_mesh(spec: str, *, num_processes: int = 1):
         raise RuntimeError(
             f"mesh {spec} needs {total} devices but jax sees "
             f"{jax.device_count()} across {jax.process_count()} processes")
-    return jax.make_mesh((d, m), ("data", "model"))
+    axes = ("pod", "data", "model") if len(dims) == 3 else ("data", "model")
+    return jax.make_mesh(dims, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -207,22 +207,47 @@ class PreemptionGuard:
         return any_process_flag(self.triggered)
 
 
+def _report_reduce_probe(tc: TrainConfig, verbose: bool) -> None:
+    """Assert the compressed path actually ran (trace-time call probe), not
+    just that the flag was set -- and say so, greppable, for the CLI drills."""
+    if tc.grad_compression != "int8_ef":
+        return
+    from repro.distributed.compression import ef_psum_calls
+
+    n = ef_psum_calls()
+    if n <= 0:
+        raise RuntimeError(
+            "--grad-compression int8_ef was requested but ef_int8_psum was "
+            "never traced into a compiled step")
+    if verbose:
+        print(f"[reduce] probe: ef_int8_psum traced into {n} compiled step(s)",
+              flush=True)
+
+
 def train_plain(cfg, tc: TrainConfig, *, ckpt: Optional[CheckpointManager],
                 ckpt_every: int, verbose: bool = True, mesh=None,
                 preempt: Optional[PreemptionGuard] = None):
     model = build_model(cfg)
     batch_fn = make_driver_batch_fn(cfg, tc, mesh)
     params, opt = init_train_state(model, tc, jax.random.PRNGKey(tc.seed))
-    psh = osh = bsh = None
+    psh = osh = bsh = efsh = None
+    gr = ef = None
     if mesh is not None:
         from jax.sharding import NamedSharding, PartitionSpec
 
+        from repro.distributed import make_grad_reduce
+
+        gr = make_grad_reduce(tc.grad_compression, mesh)
         psh, osh = train_state_shardings(model, tc, mesh)
+        if gr is not None and gr.stateful:
+            efsh = gr.state_shardings(psh, mesh)
         # put_global_tree: plain device_put when the mesh is local, shard-wise
         # landing when it spans processes (init is deterministic, every
         # process holds the full value)
         params = put_global_tree(params, psh)
         opt = put_global_tree(opt, osh)
+        if efsh is not None:
+            ef = put_global_tree(gr.init_state(params), efsh)
         bsh = batch_shardings(batch_like(batch_fn), mesh)
         metrics_sh = NamedSharding(mesh, PartitionSpec())  # host-readable everywhere
     start = 0
@@ -230,11 +255,20 @@ def train_plain(cfg, tc: TrainConfig, *, ckpt: Optional[CheckpointManager],
         # elastic restore: the checkpoint holds logical arrays, so target
         # shardings may describe a different mesh (or process count) than the
         # one that saved
-        restored, meta = ckpt.restore(
-            {"params": params, "opt": opt},
-            shardings=None if mesh is None else {"params": psh, "opt": osh})
+        has_ef = bool((ckpt.latest() or {}).get("meta", {}).get("has_ef"))
+        if has_ef and efsh is None:
+            raise ValueError(
+                "checkpoint carries grad-reduction (EF) state; resume with "
+                "--grad-compression int8_ef on the same mesh shape")
+        like = {"params": params, "opt": opt}
+        sh = None if mesh is None else {"params": psh, "opt": osh}
+        if has_ef:
+            like["ef"], sh["ef"] = ef, efsh
+        restored, meta = ckpt.restore(like, shardings=sh)
         if restored is not None:
             params, opt = restored["params"], restored["opt"]
+            if has_ef:
+                ef = restored["ef"]
             start = int(meta.get("step", 0))
             if verbose:
                 print(f"[train] resumed from step {start}")
@@ -246,8 +280,28 @@ def train_plain(cfg, tc: TrainConfig, *, ckpt: Optional[CheckpointManager],
             from repro.distributed import FusedDrainFlag
 
             drain = preempt.attach(FusedDrainFlag(mesh, guard=preempt))
-        base_step = make_train_step(model, tc)
-        if drain is not None:
+        base_step = make_train_step(model, tc, grad_reduce=gr,
+                                    mesh=mesh if gr is not None else None)
+        if gr is not None:
+            # 4-ary (params, opt, ef, batch) step with the reduction strategy
+            # injected; wrapped back to the loop's 3-ary shape below
+            if drain is not None:
+                fn4 = drain.wrap_step(
+                    base_step,
+                    in_shardings=(psh, osh, efsh, bsh),
+                    out_shardings=(psh, osh, efsh, metrics_sh),
+                    donate_argnums=(0, 1, 2))
+            else:
+                fn4 = jax.jit(base_step,
+                              in_shardings=(psh, osh, efsh, bsh),
+                              out_shardings=(psh, osh, efsh, metrics_sh),
+                              donate_argnums=(0, 1, 2))
+
+            def step_fn(p, o, b):
+                nonlocal ef
+                p, o, ef, m = fn4(p, o, ef, b)
+                return p, o, m
+        elif drain is not None:
             step_fn = drain.wrap_step(base_step,
                                       in_shardings=(psh, osh, bsh),
                                       out_shardings=(psh, osh, metrics_sh))
@@ -256,6 +310,12 @@ def train_plain(cfg, tc: TrainConfig, *, ckpt: Optional[CheckpointManager],
                               in_shardings=(psh, osh, bsh),
                               out_shardings=(psh, osh, metrics_sh),
                               donate_argnums=(0, 1))
+    def _snapshot(step):
+        payload = {"params": params, "opt": opt}
+        if ef is not None:
+            payload["ef"] = ef  # EF residuals resume with the run (unbiasedness)
+        return payload, {"step": step, "has_ef": ef is not None}
+
     # the watchdog is a process-0 role (single-process runs are process 0)
     wd = Watchdog() if is_primary() else None
     for i in range(start, tc.steps):
@@ -272,8 +332,8 @@ def train_plain(cfg, tc: TrainConfig, *, ckpt: Optional[CheckpointManager],
         # ALL processes save the same step and exit 0 together
         if preempt is not None and preempt.should_stop():
             if ckpt is not None:
-                ckpt.save(i + 1, {"params": params, "opt": opt},
-                          meta={"step": i + 1}, blocking=True)
+                payload, meta = _snapshot(i + 1)
+                ckpt.save(i + 1, payload, meta=meta, blocking=True)
                 print(f"[preempt] SIGTERM: final checkpoint at step {i + 1}; "
                       "exiting", flush=True)
             raise SystemExit(0)
@@ -282,10 +342,12 @@ def train_plain(cfg, tc: TrainConfig, *, ckpt: Optional[CheckpointManager],
             if verbose:
                 print(f"[train] step {i} loss {loss:.4f} lr {float(metrics['lr']):.2e}")
         if ckpt is not None and ckpt_every and i and i % ckpt_every == 0:
-            ckpt.save(i, {"params": params, "opt": opt}, meta={"step": i + 1},
-                      blocking=False)
+            payload, meta = _snapshot(i + 1)
+            ckpt.save(i, payload, meta=meta, blocking=False)
     if ckpt is not None:
-        ckpt.save(tc.steps, {"params": params, "opt": opt}, meta={"step": tc.steps})
+        payload, meta = _snapshot(tc.steps)
+        ckpt.save(tc.steps, payload, meta=meta)
+    _report_reduce_probe(tc, verbose)
     return params
 
 
@@ -313,11 +375,17 @@ def make_vcycle_save_cb(ckpt: CheckpointManager, schedule=None):
         stashed = sorted(state.params_before)
         payload = {"params": params, "opt": opt_state,
                    **{f"params_before_{l}": state.params_before[l] for l in stashed}}
+        if state.ef is not None:
+            # carried EF residuals: resuming without them would re-bias the
+            # first post-restore steps (the unbiasedness guarantee is exactly
+            # that transmitted + carried == true gradient over time)
+            payload["ef"] = state.ef
         meta = {
             "step": state.global_step, "phase": state.phase, "level": state.level,
             "seg_index": state.seg_index, "seg_step": state.seg_step,
             "global_step": state.global_step, "cum_flops": state.cum_flops,
-            "stashed_levels": stashed, "history": state.history.to_dict()}
+            "stashed_levels": stashed, "history": state.history.to_dict(),
+            "has_ef": state.ef is not None}
         if sched is not None:
             meta["schedule"] = sched
         ckpt.save(state.global_step, payload, meta=meta, blocking=blocking)
@@ -357,8 +425,17 @@ def restore_vcycle_state(ckpt: CheckpointManager, runner: VCycleRunner,
             f"seg_step={meta['seg_step']}) lies outside the current schedule "
             f"{current}; restart with the original --steps/--levels")
     level = int(meta["level"])
+    has_ef = bool(meta.get("has_ef"))
+    gr = runner.grad_reduce
+    if has_ef and (gr is None or not gr.stateful):
+        raise ValueError(
+            "checkpoint carries grad-reduction (EF) state; resume with "
+            "--grad-compression int8_ef on the same mesh shape")
     like_p, like_o = zero_train_state(runner.models[level], tc)
     like = {"params": like_p, "opt": like_o}
+    if has_ef:
+        like["ef"] = zero_train_state(runner.models[level], tc,
+                                      grad_reduce=gr)[2]
     stashed = [int(l) for l in meta.get("stashed_levels", [])]
     for l in stashed:
         like[f"params_before_{l}"] = zero_train_state(runner.models[l], tc)[0]
@@ -366,6 +443,8 @@ def restore_vcycle_state(ckpt: CheckpointManager, runner: VCycleRunner,
     if runner.mesh is not None:
         psh, osh = runner.level_shardings(level)
         shardings = {"params": psh, "opt": osh}
+        if has_ef:
+            shardings["ef"] = runner.ef_shardings(level)
         for l in stashed:
             shardings[f"params_before_{l}"] = runner.level_shardings(l)[0]
     restored, meta = ckpt.restore(like, shardings=shardings)
@@ -374,7 +453,8 @@ def restore_vcycle_state(ckpt: CheckpointManager, runner: VCycleRunner,
         seg_index=int(meta["seg_index"]), seg_step=int(meta["seg_step"]),
         global_step=int(meta["global_step"]), cum_flops=float(meta["cum_flops"]),
         history=History(**{k: list(v) for k, v in meta["history"].items()}),
-        params_before={l: restored[f"params_before_{l}"] for l in stashed})
+        params_before={l: restored[f"params_before_{l}"] for l in stashed},
+        ef=restored.get("ef"))
     return state, restored["params"], restored["opt"]
 
 
@@ -469,6 +549,7 @@ def train_vcycle_ckpt(cfg, ml: MultiLevelConfig, tc: TrainConfig, *,
                   meta={"step": gs, "phase": "done", "level": 0,
                         "global_step": gs, "cum_flops": out.total_flops,
                         "history": out.history.to_dict()})
+    _report_reduce_probe(tc, verbose)
     if verbose:
         print(f"[vcycle] total training FLOPs: {out.total_flops:.3e}")
     return out
@@ -486,9 +567,18 @@ def main() -> None:
     ap.add_argument("--levels", type=int, default=2)
     ap.add_argument("--alpha", type=float, default=0.25)
     ap.add_argument("--mesh", default="",
-                    help="DxM ('data','model') mesh, e.g. 2x4; host CPU devices "
-                         "are forced when the platform has fewer (smoke/tests); "
-                         "with --num-processes > 1 the mesh spans processes")
+                    help="DxM ('data','model') mesh, e.g. 2x4, or PxDxM "
+                         "('pod','data','model') with a leading DCN axis, e.g. "
+                         "2x1x1; host CPU devices are forced when the platform "
+                         "has fewer (smoke/tests); with --num-processes > 1 "
+                         "the mesh spans processes")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "dense", "int8_ef"],
+                    help="gradient-reduction strategy (distributed/reduce.py): "
+                         "'none' keeps pjit's implicit reduction; 'dense' runs "
+                         "the explicit shard_map'd full-precision reduction; "
+                         "'int8_ef' reduces dense within ICI and int8+error-"
+                         "feedback across the DCN ('pod') axis. Needs --mesh")
     ap.add_argument("--coordinator", default="127.0.0.1:9876",
                     help="jax.distributed coordinator host:port (multi-process "
                          "runs; process 0's address)")
@@ -520,12 +610,18 @@ def main() -> None:
     # device-touching jax call: distributed init selects the gloo CPU
     # collectives and both may need to force the host device count, which
     # only works pre-backend-init
+    if args.grad_compression != "none" and not args.mesh:
+        ap.error("--grad-compression needs --mesh (the reduction axes live "
+                 "on the mesh; use e.g. --mesh 2x1 or --mesh 2x1x1)")
     if args.num_processes > 1:
         if not args.mesh:
             args.mesh = f"{args.num_processes}x1"  # pure data-parallel default
-        d, m = parse_mesh_arg(args.mesh)
+        dims = parse_mesh_arg(args.mesh)
+        total = 1
+        for d in dims:
+            total *= d
         init_distributed(args.coordinator, args.num_processes, args.process_id,
-                         local_devices=(d * m) // args.num_processes)
+                         local_devices=total // args.num_processes)
     mesh = (make_cli_mesh(args.mesh, num_processes=args.num_processes)
             if args.mesh else None)
     primary = is_primary()
@@ -544,7 +640,10 @@ def main() -> None:
         cfg = cfg.replace(compute_dtype=jnp.float32)
     tc = TrainConfig(steps=args.steps, warmup_steps=max(args.steps // 20, 1),
                      peak_lr=args.lr, batch_size=args.batch, seq_len=args.seq,
-                     seed=args.seed)
+                     seed=args.seed, grad_compression=args.grad_compression)
+    if args.grad_compression != "none" and primary:
+        print(f"[reduce] grad-compression={args.grad_compression} over mesh "
+              f"{args.mesh} (axes {mesh.axis_names})", flush=True)
     if args.ckpt_local_dir:
         if not args.ckpt_dedup:
             # the no-shared-FS protocol exchanges digests, which only exist

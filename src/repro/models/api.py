@@ -76,13 +76,25 @@ def build_model(cfg: ModelConfig) -> Model:
 # step builders
 
 
-def make_train_step(model: Model, tc: TrainConfig) -> Callable:
+def make_train_step(model: Model, tc: TrainConfig, *, grad_reduce=None,
+                    mesh=None) -> Callable:
     """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
 
     With ``tc.grad_accum > 1`` the batch leaves must have a leading microbatch
     axis of size grad_accum; gradients are accumulated with a scan (activation
     memory divided by grad_accum — the standard TPU pipelining lever).
+
+    With a ``grad_reduce`` strategy (``distributed/reduce.py``) and a ``mesh``,
+    the step is instead built as a ``shard_map`` over the mesh with gradient
+    reduction an explicit, pluggable layer, and the signature becomes 4-ary:
+    ``train_step(params, opt_state, ef, batch) -> (params, opt_state, ef,
+    metrics)`` where ``ef`` is the strategy's carried state (the EF residual
+    tree for int8, ``None``-leaved zeros tree for stateless strategies).
     """
+    if grad_reduce is not None:
+        if mesh is None:
+            raise ValueError("grad_reduce requires a mesh")
+        return _make_shardmap_train_step(model, tc, grad_reduce, mesh)
 
     def loss_fn(params, micro):
         loss, metrics = model.loss(params, micro, z_loss=tc.z_loss)
@@ -141,6 +153,84 @@ def make_train_step(model: Model, tc: TrainConfig) -> Callable:
                 lambda g, p: g.astype(p.dtype), grads, p_use))[0]
         params, opt_state, om = adamw_update(params, grads, opt_state, tc)
         return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def _make_shardmap_train_step(model: Model, tc: TrainConfig, grad_reduce, mesh):
+    """The explicit-reduction train step: grad accumulation + reduction run
+    inside a ``shard_map`` over ``mesh`` with the strategy injected.
+
+    Params/opt enter the body replicated (in_specs P()): under ``jit`` with
+    FSDP in_shardings this inserts exactly one all-gather per step — the same
+    pattern ``tc.pregather_params`` opts into on the pjit path, so that flag is
+    ignored here.  The optimizer update runs redundantly per rank on the
+    replicated reduced gradients (identical values everywhere, so the
+    global-norm clip stays consistent); jit out_shardings re-shard the result
+    back onto the FSDP layout, keeping the external train-state layout — and
+    hence checkpoints and V-cycle level transitions — unchanged.  Compute over
+    the "model" axis is replicated inside the body (tensor parallelism stays a
+    pjit concern; this path targets the data/DCN reduction).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import no_constraints
+    from repro.distributed.sharding import logical_spec
+
+    def loss_fn(params, micro):
+        loss, metrics = model.loss(params, micro, z_loss=tc.z_loss)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    data_axes = grad_reduce.data_axes
+
+    def body(params, opt_state, ef, batch):
+        with no_constraints():
+            if tc.grad_accum > 1:
+                def acc_body(carry, micro):
+                    g_acc, m_acc = carry
+                    (_, metrics), grads = grad_fn(params, micro)
+                    g_acc = jax.tree.map(
+                        lambda a, b: a + b.astype(a.dtype), g_acc, grads)
+                    m_acc = jax.tree.map(lambda a, b: a + b, m_acc, metrics)
+                    return (g_acc, m_acc), None
+
+                (_, m0), g0 = grad_fn(params, jax.tree.map(lambda x: x[0], batch))
+                g0 = jax.tree.map(lambda g: g.astype(jnp.float32), g0)
+                rest = jax.tree.map(lambda x: x[1:], batch)
+                (g_sum, m_sum), _ = jax.lax.scan(acc_body, (g0, m0), rest)
+                inv = 1.0 / tc.grad_accum
+                grads = jax.tree.map(lambda g: g * inv, g_sum)
+                metrics = jax.tree.map(lambda m: m * inv, m_sum)
+            else:
+                (_, metrics), grads = grad_fn(params, batch)
+        grads, ef = grad_reduce.reduce(grads, ef)
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, data_axes), metrics)
+        params, opt_state, om = adamw_update(params, grads, opt_state, tc)
+        return params, opt_state, ef, {**metrics, **om}
+
+    ef_spec = grad_reduce.state_specs() if grad_reduce.stateful else P()
+
+    def train_step(params, opt_state, ef, batch):
+        # specs are computed at trace time from the actual abstract shapes so
+        # the batch specs agree leaf-for-leaf with ``batch_shardings`` (same
+        # progressive-drop divisibility logic)
+        pspec = jax.tree.map(lambda _: P(), params)
+        ospec = jax.tree.map(lambda _: P(), opt_state)
+        efspec = jax.tree.map(lambda _: ef_spec, ef)
+
+        def bspec_one(x):
+            axes = ("batch",) + ("seq",) * (len(x.shape) - 1)
+            return logical_spec(x.shape, axes, mesh)
+
+        bspec = jax.tree.map(bspec_one, batch)
+        f = shard_map(
+            body, mesh=mesh,
+            in_specs=(pspec, ospec, efspec, bspec),
+            out_specs=(pspec, ospec, efspec, P()),
+            check_rep=False)
+        return f(params, opt_state, ef, batch)
 
     return train_step
 
@@ -241,24 +331,36 @@ def train_state_specs(model: Model, tc: TrainConfig):
     return ps, adamw_init_specs(ps, tc)
 
 
-def train_state_shardings(model: Model, tc: TrainConfig, mesh, rules=None):
+def train_state_shardings(model: Model, tc: TrainConfig, mesh, rules=None,
+                          grad_reduce=None):
     """(param, opt) NamedSharding trees for a model's train state on ``mesh``.
 
     Derived from the Spec trees (the optimizer mirrors the parameter logical
     axes), so every V-cycle level gets its own layout and a checkpoint written
     under one mesh can be restored onto another by passing these to
     ``CheckpointManager.restore(shardings=...)``.
+
+    With a stateful ``grad_reduce`` strategy a third tree is returned: the
+    sharding of the strategy's carried state (EF residuals, DCN-axis sharded
+    on their leading dim).
     """
     from repro.distributed import param_shardings
 
     ps, opt_specs = train_state_specs(model, tc)
-    return param_shardings(ps, mesh, rules), param_shardings(opt_specs, mesh, rules)
+    psh = param_shardings(ps, mesh, rules)
+    osh = param_shardings(opt_specs, mesh, rules)
+    if grad_reduce is None:
+        return psh, osh
+    efsh = (grad_reduce.state_shardings(psh, mesh)
+            if grad_reduce.stateful else None)
+    return psh, osh, efsh
 
 
-def zero_train_state(model: Model, tc: TrainConfig):
+def zero_train_state(model: Model, tc: TrainConfig, grad_reduce=None):
     """Zero-filled (params, opt_state) with the exact structure/shape/dtype of
     ``init_train_state`` -- cheap "like" trees for checkpoint restore (no RNG,
-    no init math, no model trace)."""
+    no init math, no model trace).  With a stateful ``grad_reduce`` strategy a
+    third tree (the zero EF-residual state) is returned."""
     from repro.param import is_spec
 
     ps, opt_specs = train_state_specs(model, tc)
@@ -267,4 +369,7 @@ def zero_train_state(model: Model, tc: TrainConfig):
         ps, is_leaf=is_spec)
     opt_state = jax.tree.map(
         lambda s: jnp.zeros(s.shape, s.dtype), opt_specs, is_leaf=is_spec)
-    return params, opt_state
+    if grad_reduce is None:
+        return params, opt_state
+    ef = grad_reduce.init_state(params) if grad_reduce.stateful else None
+    return params, opt_state, ef
