@@ -1,0 +1,121 @@
+"""Per-family V-cycle benchmark: every model family on ONE accounting basis
+(FLOPs saving at matched quality, exactly as tests/test_baselines.py pins it)
+PLUS the energy/CO2 conversion (core/flops.py EnergyModel; DESIGN.md §7).
+
+One arena per family -- dense LM, MoE (``coalesce_experts=True``: pairwise
+expert merging with router-consistent carried scalars), SSM (xLSTM), hybrid
+(jamba-style mamba+attn+MoE) and ViT -- each running from-scratch vs the
+2-level V-cycle on the same deterministic data stream.  The table reports,
+per family:
+
+  * FLOPs to the scratch arm's final quality for both arms + the saving,
+  * the same FLOPs priced in joules / kWh / kgCO2e on a named device
+    envelope (the saving carries over verbatim: energy is linear in FLOPs
+    on a fixed device+utilization basis, which is the point of keeping ONE
+    basis),
+  * the level configs the ProjectionPlan derived, so the table is
+    self-describing about what actually coalesced.
+
+Smoke scale: CPU-runnable; only relative numbers matter, as everywhere else
+in benchmarks/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict
+
+from benchmarks.common import Arena, emit, proxy_tc, save_json
+from repro.config import MultiLevelConfig
+from repro.configs import get_config, paper_models
+from repro.core import flops as flops_lib
+from repro.core import plans as plans_lib
+from repro.core.vcycle import run_vcycle
+
+ML_FAMILY = MultiLevelConfig(n_levels=2, alpha=0.25, e_a_frac=0.05,
+                             e_small_frac=0.5)
+
+
+def family_configs(quick: bool = False) -> Dict:
+    """The five family arms.  Smoke registry configs, trimmed so the table
+    stays CPU-runnable; MoE/hybrid turn on expert coalescing (the beyond-paper
+    extension this table exists to exercise)."""
+    dense = get_config("tinyllama-1.1b", smoke=True)
+    moe = get_config("phi3.5-moe-42b-a6.6b", smoke=True).replace(
+        coalesce_experts=True)
+    ssm = get_config("xlstm-125m", smoke=True)
+    hybrid = get_config("jamba-1.5-large-398b", smoke=True).replace(
+        coalesce_experts=True)
+    vit = paper_models.deit_proxy(d_model=64, n_layers=4)
+    out = {"dense": dense, "moe": moe, "ssm": ssm, "hybrid": hybrid, "vit": vit}
+    if quick:
+        out.pop("hybrid")  # the slowest compile; --quick keeps one MoE arm
+    return out
+
+
+def _clear():
+    import jax
+
+    jax.clear_caches()  # long bench runs accumulate jit dylibs -> LLVM ENOMEM
+
+
+def bench_family(quick: bool = False, *, device: str = "tpu-v4",
+                 utilization: float = 0.4) -> Dict:
+    results: Dict = {"basis": {"device": device, "utilization": utilization,
+                               "note": "energy = EnergyModel(device, util) "
+                                       "applied to the SAME pinned FLOPs "
+                                       "accounting as every other table"}}
+    for fam, cfg in family_configs(quick).items():
+        _clear()
+        tc = proxy_tc(quick, seq_len=16 if cfg.family != "vit" else 24,
+                      batch_size=4)
+        plan = plans_lib.build_plan(cfg, ML_FAMILY)
+        arena = Arena(cfg, tc)
+        t0 = time.time()
+        out = run_vcycle(cfg, ML_FAMILY, tc, arena.batch_fn, seed=0,
+                         target_loss=arena.target)
+        saving = arena.saving(out.history)
+        row = {
+            "config": cfg.name,
+            "hooks": list(plan.hooks),
+            "width_axes": {k: int(v) for k, v in plan.width_axes.items()},
+            "protected_axes": list(plan.protected_axes),
+            "carried": {k: float(v) for k, v in plan.carried.items()},
+            "saving": saving,
+            # the SAME flops numbers, priced in joules/kgCO2e (linear, so the
+            # saving fraction is identical by construction -- one basis)
+            "energy": {
+                "scratch": flops_lib.energy_report(
+                    saving["base_flops"], device, utilization=utilization),
+                "ours": flops_lib.energy_report(
+                    saving["ours_flops"], device, utilization=utilization)
+                if saving["ours_flops"] == saving["ours_flops"] else None,
+            },
+            "history": out.history.to_dict(),
+        }
+        results[fam] = row
+        e = row["energy"]["scratch"]
+        emit(f"family/{fam}", (time.time() - t0) * 1e6
+             / max(len(out.history.step), 1),
+             f"flops_saving={saving['flops_saving']:.3f} "
+             f"scratch_kwh={e['kwh']:.3e} kgco2e={e['kgco2e']:.3e}")
+    # quick runs keep their own file so they never clobber the committed
+    # full 5-family table
+    save_json("table_family_quick" if quick else "table_family", results)
+    return results
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--device", default="tpu-v4",
+                    choices=sorted(flops_lib.DEVICES))
+    ap.add_argument("--utilization", type=float, default=0.4)
+    args = ap.parse_args()
+    bench_family(args.quick, device=args.device, utilization=args.utilization)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

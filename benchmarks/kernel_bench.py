@@ -1,86 +1,188 @@
-"""Kernel micro-benchmarks: every op x backend through the dispatch registry.
+"""Kernel micro-benchmarks as APPEND-ONLY per-backend perf trajectories
+(``benchmarks/results/BENCH_kernels_<backend>.json``), matching the
+``BENCH_serve.json`` / ``BENCH_dcn.json`` discipline.
 
-For each registered implementation we report wall time and max|err| vs the
-kernels/ref.py oracle, then write one ``BENCH_kernels_<backend>.json`` per
-backend under benchmarks/results/ so the per-backend perf trajectory
-populates over time.  Off-TPU the "pallas" backend resolves to the
-interpreter: its numbers are a correctness check, not a performance claim
-(the flag in the JSON records which executable actually ran).
+Every op runs at ONE canonical fixed shape per op (the shapes the very first
+committed points used), so the microsecond numbers stay comparable across the
+whole trajectory -- a point appended today diffs cleanly against the first
+one.  Each invocation appends one point per self-resolving backend:
+
+  {ts, platform, interpreted, entries: [{op, shape, us, max_err}]}
+
+Legacy single-dict files (the pre-trajectory schema) are transparently
+migrated: the old dict becomes the trajectory's first point.
+
+``--check-regression`` gates (exit 1 on violation), per backend:
+
+  * coverage  -- every (op, shape) present in the last committed point must
+                 be present in the new one (a silently dropped kernel is a
+                 regression, not a cleanup),
+  * accuracy  -- max|err| vs the kernels/ref.py oracle within the per-op
+                 tolerance (hardware-independent),
+  * speed     -- us <= --max-slowdown x the last committed point's us, but
+                 ONLY when that point ran on the same jax platform (a laptop
+                 point must not gate a TPU run; cross-platform points simply
+                 extend the trajectory).
+
+Off-TPU the "pallas" backend resolves to the interpreter: its numbers are a
+correctness check, not a performance claim (the ``interpreted`` flag records
+which executable actually ran; interpreted timing is exempt from the speed
+gate -- interpreter wall time tracks Python, not the kernel).
 """
 from __future__ import annotations
 
+import argparse
 import functools
+import json
+import os
+import sys
+import time
 from typing import Dict, List
 
-import jax
-import jax.numpy as jnp
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
-from benchmarks.common import emit, save_json, time_call
-from repro.kernels import dispatch, ref
+# ONE canonical shape per op -- frozen since the first committed points; new
+# shapes mean a new op name, not a silent redefinition of an existing row.
+CANONICAL_SHAPES = {
+    "flash_attention": dict(B=1, H=4, S=256, D=64),
+    "flash_attention_bwd": dict(B=1, H=4, S=256, D=64),
+    "coalesce_pair": (1024, 512),
+    "interp_axpy": (1024, 1024),
+}
+
+# hardware-independent max|err| gates vs the kernels/ref.py oracles
+ERR_TOL = {
+    "flash_attention": 5e-2,   # bf16 accumulation differences
+    "coalesce_pair": 1e-4,
+    "interp_axpy": 1e-4,
+}
+
+
+def _bench_path(backend: str) -> str:
+    return os.path.join(RESULTS_DIR, f"BENCH_kernels_{backend}.json")
+
+
+def _load_trajectory(backend: str) -> List[Dict]:
+    path = _bench_path(backend)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, dict):  # legacy single-point schema -> first point
+        data.setdefault("ts", None)
+        return [data]
+    return data
 
 
 def _err(got, want) -> float:
+    import jax.numpy as jnp
+
     return float(jnp.max(jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32))))
 
 
-def _sweep_backend(backend: str, quick: bool) -> List[Dict]:
+def _bench_backend(backend: str) -> List[Dict]:
+    """One trajectory point's entries: every op at its canonical shape."""
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import emit, time_call
+    from repro.kernels import dispatch, ref
+
     rows: List[Dict] = []
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
-    # the sweep only runs backends that resolve to themselves, so "pallas"
-    # here implies real Mosaic; only the interpret backend needs small shapes
     interpreted = backend == "pallas-interpret"
-    # interpret-mode timing on big shapes is pointlessly slow; shrink the sweep
-    small = quick or interpreted
 
     # -- flash_attention (fwd + bwd through the custom VJP) ------------------
-    shapes = [(1, 4, 256, 64)] if small else [(1, 4, 256, 64), (2, 8, 512, 64)]
+    s = CANONICAL_SHAPES["flash_attention"]
+    B, H, S, D = s["B"], s["H"], s["S"], s["D"]
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, H, S, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, H, S, D), jnp.bfloat16)
     impl = dispatch.get_impl("flash_attention", backend)
-    for (B, H, S, D) in shapes:
-        q = jax.random.normal(ks[0], (B, H, S, D), jnp.bfloat16)
-        k = jax.random.normal(ks[1], (B, H, S, D), jnp.bfloat16)
-        v = jax.random.normal(ks[2], (B, H, S, D), jnp.bfloat16)
-        fwd = jax.jit(functools.partial(impl, causal=True, block_q=128, block_k=128))
-        us = time_call(fwd, q, k, v, reps=1 if interpreted else 3)
-        err = _err(fwd(q, k, v), ref.naive_attention(q, k, v, causal=True))
-        name = f"kernels/flash_attention/{backend}/B{B}H{H}S{S}D{D}"
-        emit(name, us, f"max_err={err:.2e}")
-        rows.append({"op": "flash_attention", "shape": f"B{B}H{H}S{S}D{D}",
-                     "us": us, "max_err": err})
-        grad = jax.jit(jax.grad(lambda q, k, v: jnp.sum(
-            fwd(q, k, v).astype(jnp.float32)), argnums=(0, 1, 2)))
-        us_b = time_call(grad, q, k, v, reps=1 if interpreted else 3)
-        emit(name + "/bwd", us_b, "grad")
-        rows.append({"op": "flash_attention_bwd", "shape": f"B{B}H{H}S{S}D{D}",
-                     "us": us_b, "max_err": None})
+    fwd = jax.jit(functools.partial(impl, causal=True, block_q=128, block_k=128))
+    us = time_call(fwd, q, k, v, reps=1 if interpreted else 3)
+    err = _err(fwd(q, k, v), ref.naive_attention(q, k, v, causal=True))
+    shape = f"B{B}H{H}S{S}D{D}"
+    emit(f"kernels/flash_attention/{backend}/{shape}", us, f"max_err={err:.2e}")
+    rows.append({"op": "flash_attention", "shape": shape, "us": us, "max_err": err})
+    grad = jax.jit(jax.grad(lambda q, k, v: jnp.sum(
+        fwd(q, k, v).astype(jnp.float32)), argnums=(0, 1, 2)))
+    us_b = time_call(grad, q, k, v, reps=1 if interpreted else 3)
+    emit(f"kernels/flash_attention/{backend}/{shape}/bwd", us_b, "grad")
+    rows.append({"op": "flash_attention_bwd", "shape": shape, "us": us_b,
+                 "max_err": None})
 
     # -- coalesce_pair -------------------------------------------------------
-    shape = (1024, 512) if small else (4096, 2048)
-    w = jax.random.normal(ks[0], shape, jnp.float32)
+    shp = CANONICAL_SHAPES["coalesce_pair"]
+    w = jax.random.normal(ks[0], shp, jnp.float32)
     impl = dispatch.get_impl("coalesce_pair", backend)
     fn = jax.jit(functools.partial(impl, axis=0, w0=0.5))
     us = time_call(fn, w, reps=1 if interpreted else 5)
     err = _err(fn(w), ref.coalesce_pair_ref(w, axis=0, w0=0.5))
-    name = f"kernels/coalesce_pair/{backend}/{shape[0]}x{shape[1]}"
-    emit(name, us, f"max_err={err:.2e}")
-    rows.append({"op": "coalesce_pair", "shape": f"{shape[0]}x{shape[1]}",
-                 "us": us, "max_err": err})
+    shape = f"{shp[0]}x{shp[1]}"
+    emit(f"kernels/coalesce_pair/{backend}/{shape}", us, f"max_err={err:.2e}")
+    rows.append({"op": "coalesce_pair", "shape": shape, "us": us, "max_err": err})
 
     # -- interp_axpy ---------------------------------------------------------
-    shape = (1024, 1024) if small else (2048, 2048)
-    a = jax.random.normal(ks[0], shape, jnp.float32)
-    b = jax.random.normal(ks[1], shape, jnp.float32)
+    shp = CANONICAL_SHAPES["interp_axpy"]
+    a = jax.random.normal(ks[0], shp, jnp.float32)
+    b = jax.random.normal(ks[1], shp, jnp.float32)
     impl = dispatch.get_impl("interp_axpy", backend)
     fn = jax.jit(lambda a, b: impl(a, b, 0.25))
     us = time_call(fn, a, b, reps=1 if interpreted else 5)
     err = _err(fn(a, b), ref.interp_axpy_ref(a, b, 0.25))
-    name = f"kernels/interp_axpy/{backend}/{shape[0]}x{shape[1]}"
-    emit(name, us, f"max_err={err:.2e}")
-    rows.append({"op": "interp_axpy", "shape": f"{shape[0]}x{shape[1]}",
-                 "us": us, "max_err": err})
+    shape = f"{shp[0]}x{shp[1]}"
+    emit(f"kernels/interp_axpy/{backend}/{shape}", us, f"max_err={err:.2e}")
+    rows.append({"op": "interp_axpy", "shape": shape, "us": us, "max_err": err})
     return rows
 
 
-def bench_kernels(quick: bool = False) -> None:
+def _check_point(backend: str, baseline: List[Dict], entry: Dict,
+                 max_slowdown: float) -> List[str]:
+    """Regression messages for the freshly appended ``entry`` vs the LAST
+    committed trajectory point (empty list = gate passed)."""
+    failures: List[str] = []
+    new = {(r["op"], r["shape"]): r for r in entry["entries"]}
+    for (op, _shape), r in new.items():
+        tol = ERR_TOL.get(op)
+        if tol is not None and r["max_err"] is not None and r["max_err"] > tol:
+            failures.append(f"{backend}/{op}: max_err {r['max_err']:.3e} > {tol}")
+    if not baseline:
+        return failures
+    last = baseline[-1]
+    old = {(r["op"], r["shape"]): r for r in last.get("entries", [])}
+    for key in old:
+        if key not in new:
+            failures.append(f"{backend}/{key[0]}@{key[1]}: dropped from sweep")
+    # interpreted timing tracks Python, not the kernel; and a point from a
+    # different platform must not gate this machine's wall clock
+    if entry["interpreted"] or last.get("platform") != entry["platform"]:
+        return failures
+    for key, r_old in old.items():
+        r_new = new.get(key)
+        if r_new is None or not r_old.get("us"):
+            continue
+        ratio = r_new["us"] / r_old["us"]
+        if ratio > max_slowdown:
+            failures.append(
+                f"{backend}/{key[0]}@{key[1]}: {r_new['us']:.0f}us is "
+                f"{ratio:.2f}x the last committed {r_old['us']:.0f}us "
+                f"(limit {max_slowdown}x)")
+    return failures
+
+
+def bench_kernels(quick: bool = False, *, check_regression: bool = False,
+                  max_slowdown: float = 4.0) -> int:
+    """Append one trajectory point per self-resolving backend; returns the
+    number of regression failures (0 = gate passed).  ``quick`` is accepted
+    for driver symmetry -- the canonical shapes are already smoke-sized."""
+    del quick
+    import jax
+
+    from benchmarks.common import emit
+    from repro.kernels import dispatch
+
+    all_failures: List[str] = []
     for backend in dispatch.BACKENDS:
         resolved = dispatch.resolve_backend("flash_attention", backend)
         if resolved != backend:
@@ -88,10 +190,45 @@ def bench_kernels(quick: bool = False) -> None:
             # duplicate sweep and let the pallas-interpret row speak
             emit(f"kernels/{backend}", 0.0, f"resolved_to={resolved}")
             continue
-        rows = _sweep_backend(backend, quick)
-        save_json(f"BENCH_kernels_{backend}", {
+        baseline = _load_trajectory(backend)  # read BEFORE appending
+        entry = {
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
             "backend": backend,
             "platform": jax.default_backend(),
             "interpreted": backend == "pallas-interpret",
-            "entries": rows,
-        })
+            "entries": _bench_backend(backend),
+        }
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(_bench_path(backend), "w") as f:
+            json.dump(baseline + [entry], f, indent=1, default=float)
+        print(f"[kernel_bench] appended trajectory point #{len(baseline) + 1} "
+              f"-> {_bench_path(backend)}", flush=True)
+        if check_regression:
+            all_failures += _check_point(backend, baseline, entry, max_slowdown)
+    if check_regression:
+        for msg in all_failures:
+            print(f"[kernel_bench] REGRESSION: {msg}", flush=True)
+        if not all_failures:
+            print("[kernel_bench] regression gate passed", flush=True)
+    return len(all_failures)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="kept for CLI symmetry with the other benches")
+    ap.add_argument("--max-slowdown", type=float, default=4.0,
+                    help="allowed us ratio vs the last committed same-platform "
+                         "point (CI runners are noisy; 4x flags real cliffs)")
+    ap.add_argument("--check-regression", action="store_true",
+                    help="fail (exit 1) on dropped ops, accuracy outside the "
+                         "per-op tolerance, or a same-platform slowdown > "
+                         "--max-slowdown vs the last committed point")
+    args = ap.parse_args()
+    n = bench_kernels(args.quick, check_regression=args.check_regression,
+                      max_slowdown=args.max_slowdown)
+    return 1 if (args.check_regression and n) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,10 @@ Table 3  DeiT-B:    ours vs from-scratch on the vision proxy.
 Table 4  BERT-Large proxy: 2-level vs 3-level V-cycle (more levels help).
 Table 5  Ablations: E_a (A), E_small (B), alpha incl. 1.0 (C), coalesced size (D).
 App. F   Removing Coalescing (random small init) hurts.
+
+Beyond the paper, ``bench_family`` (benchmarks/family_tables.py) runs the same
+arena protocol over every model family -- dense / MoE / SSM / hybrid / ViT --
+and prices the pinned FLOPs numbers in joules and kgCO2e (DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -26,6 +30,13 @@ def _clear():
     import jax
 
     jax.clear_caches()  # long bench runs accumulate jit dylibs -> LLVM ENOMEM
+
+
+def bench_family(quick: bool = False) -> Dict:
+    """Per-family FLOPs + energy table (delegates to family_tables.py)."""
+    from benchmarks import family_tables
+
+    return family_tables.bench_family(quick)
 
 
 def _run_ours(arena: Arena, ml: MultiLevelConfig, tag: str, results: Dict,

@@ -14,11 +14,12 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    help="comma list of: table1,table2,table3,table4,table5,appF,kernels,roofline")
+                    help="comma list of: table1,table2,table3,table4,table5,family,appF,kernels,roofline")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only != "all" else {
-        "table1", "table2", "table3", "table4", "table5", "appF", "kernels", "roofline"}
+        "table1", "table2", "table3", "table4", "table5", "family", "appF",
+        "kernels", "roofline"}
 
     from benchmarks import kernel_bench, paper_tables, roofline
 
@@ -38,6 +39,8 @@ def main() -> None:
         paper_tables.bench_table4_levels(args.quick)
     if "table5" in want:
         paper_tables.bench_table5_ablations(args.quick)
+    if "family" in want:
+        paper_tables.bench_family(args.quick)
     if "appF" in want:
         paper_tables.bench_appendixF_no_coalesce(args.quick)
     print(f"# total {time.time()-t0:.0f}s", file=sys.stderr)

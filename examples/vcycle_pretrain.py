@@ -1,12 +1,18 @@
-"""End-to-end driver: pre-train a ~100M-parameter GPT for a few hundred steps
-with the V-cycle schedule, fault-tolerant checkpointing and auto-resume.
+"""End-to-end driver: pre-train with the V-cycle schedule, fault-tolerant
+checkpointing and auto-resume -- for ANY model family.
 
 This is the deliverable-(b) end-to-end example; it runs the production
 launcher code path (repro.launch.train).  On this CPU container the default
 invocation uses a reduced width so a few hundred steps finish in minutes; pass
 --full-100m to run the real ~100M config (slower).
 
+``--config`` picks the model family: a tiny same-family config runs the SAME
+V-cycle end-to-end -- the family's ProjectionPlan (printed at startup) decides
+what coalesces, what is protected, and which scalars carry across levels:
+
     PYTHONPATH=src python examples/vcycle_pretrain.py [--steps 200] [--full-100m]
+    PYTHONPATH=src python examples/vcycle_pretrain.py --config moe --steps 40
+    PYTHONPATH=src python examples/vcycle_pretrain.py --config ssm --steps 40
 """
 import argparse
 
@@ -15,6 +21,8 @@ from repro.core.flops import total_params
 from repro.launch.train import train_vcycle_ckpt
 from repro.checkpoint import CheckpointManager
 from repro.models.api import build_model
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "vit")
 
 
 def gpt_100m() -> ModelConfig:
@@ -30,19 +38,49 @@ def gpt_small() -> ModelConfig:
                               d_ff=1024, stages=uniform_stages(8, BlockSpec("attn", "dense")))
 
 
+def family_config(name: str) -> ModelConfig:
+    """A tiny same-family config per ``--config`` choice.  MoE and hybrid turn
+    on expert coalescing so the router-consistent merge path is exercised."""
+    from repro.configs import get_config, paper_models
+
+    if name == "dense":
+        return gpt_small()
+    if name == "moe":
+        return get_config("phi3.5-moe-42b-a6.6b", smoke=True).replace(
+            coalesce_experts=True)
+    if name == "ssm":
+        return get_config("xlstm-125m", smoke=True)
+    if name == "hybrid":
+        return get_config("jamba-1.5-large-398b", smoke=True).replace(
+            coalesce_experts=True)
+    if name == "vit":
+        return paper_models.deit_proxy(d_model=64, n_layers=4)
+    raise SystemExit(f"unknown --config {name!r} (choose from {FAMILIES})")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--config", default="dense", choices=FAMILIES,
+                    help="model family to pre-train (tiny same-family config)")
     ap.add_argument("--full-100m", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/vcycle_pretrain_ckpt")
     args = ap.parse_args()
 
-    cfg = gpt_100m() if args.full_100m else gpt_small()
-    n = total_params(build_model(cfg).specs())
+    if args.full_100m:
+        cfg = gpt_100m()
+    else:
+        cfg = family_config(args.config)
+    model = build_model(cfg)
+    n = total_params(model.specs())
     print(f"model {cfg.name}: {n/1e6:.1f}M params, {cfg.n_layers} layers")
-    tc = TrainConfig(steps=args.steps, warmup_steps=max(args.steps // 20, 1),
-                     peak_lr=6e-4, batch_size=8, seq_len=128, log_every=10)
     ml = MultiLevelConfig(n_levels=2, alpha=0.25, e_a_frac=0.05, e_small_frac=0.5)
+    print(model.projection_plan(ml).describe())
+    # registry smoke configs are narrower than gpt_small: shorter sequences
+    # keep the non-dense families CPU-fast without changing the schedule
+    seq = 128 if args.config == "dense" or args.full_100m else 32
+    tc = TrainConfig(steps=args.steps, warmup_steps=max(args.steps // 20, 1),
+                     peak_lr=6e-4, batch_size=8, seq_len=seq, log_every=10)
     ckpt = CheckpointManager(args.ckpt_dir)
     out = train_vcycle_ckpt(cfg, ml, tc, ckpt=ckpt, ckpt_every=50)
     print(f"done; final loss {out.history.loss[-1]:.4f}; "

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.config import ModelConfig, MultiLevelConfig, TrainConfig
 from repro.core import flops as flops_lib
 from repro.core import operators as ops
+from repro.core import plans as plans_lib
 from repro.core.vcycle import History, train_segment
 from repro.models.api import build_model, make_train_step
 from repro.optim import adamw_init, adamw_update
@@ -36,7 +37,8 @@ def _grow_then_train(cfg, ml, tc, batch_fn, *, width: bool, depth: bool,
     """Shared scaffold: train small -> expand -> train large."""
     if depth_variant is not None:
         ml = dataclasses.replace(ml, depth_variant=depth_variant)
-    small_cfg = ops.coalesce_config(cfg, ml, width=width, depth=depth)
+    plan = plans_lib.build_plan(cfg, ml, width=width, depth=depth)
+    small_cfg = plan.small_cfg
     small = build_model(small_cfg)
     hist = History()
     params_s = small.init(jax.random.PRNGKey(seed))
@@ -63,7 +65,7 @@ def _grow_then_train(cfg, ml, tc, batch_fn, *, width: bool, depth: bool,
         params_s = ema
 
     grow = ops.make_decoalesce_fn(build_model(cfg).specs(), cfg, ml,
-                                  width=width, depth=depth)
+                                  width=width, depth=depth, plan=plan)
     params = grow(params_s)
     model = build_model(cfg)
     _, _, hist, cum, g = train_segment(
@@ -103,16 +105,16 @@ def run_network_expansion(cfg, ml, tc, batch_fn, *, small_steps=None, final_step
 def run_ligo(cfg, ml, tc, batch_fn, *, small_steps=None, final_steps=None,
              fit_steps: int = 30, fit_lr: float = 1e-2, seed=0,
              target_loss=None) -> History:
-    small_cfg = ops.coalesce_config(cfg, ml)
-    small = build_model(small_cfg)
+    plan = plans_lib.build_plan(cfg, ml)
+    small = build_model(plan.small_cfg)
     model = build_model(cfg)
     specs = model.specs()
     hist = History()
     params_s, _, hist, cum, g = train_segment(
         small, tc, batch_fn, small_steps or tc.steps // 2, history=hist, level=1, seed=seed)
 
-    # trainable expansion: start from the analytic de-coalescing matrices
-    maps0 = ops.build_level_maps(cfg, ml).as_jnp()
+    # trainable expansion: start from the plan's analytic de-coalescing matrices
+    maps0 = plan.build_maps().as_jnp()
     theta = {
         "width": {ax: {"T_out": m.T_out, "T_in": m.T_in} for ax, m in maps0.width.items()},
         "depth": {k: {"G": d.G} for k, d in maps0.depth.items()},
@@ -125,7 +127,8 @@ def run_ligo(cfg, ml, tc, batch_fn, *, small_steps=None, final_steps=None,
                  for ax, t in theta["width"].items()}
         depth = {k: proj.DepthMats(R=None, G=d["G"]) for k, d in theta["depth"].items()}
         maps = ops.LevelMaps(width=width, depth=depth)
-        return ops._project_tree(p_small, specs, maps, "decoalesce", cfg.coalesce_experts)
+        return ops._project_tree(p_small, specs, maps, "decoalesce",
+                                 plan.role_overrides)
 
     def fit_loss(theta, batch):
         return model.loss(project(theta, params_s), batch)[0]
@@ -153,7 +156,7 @@ def run_ligo(cfg, ml, tc, batch_fn, *, small_steps=None, final_steps=None,
 
 def run_ki(cfg, ml, tc, batch_fn, *, small_steps=None, final_steps=None,
            seed=0, target_loss=None, kd_weight: float = 0.5) -> History:
-    small_cfg = ops.coalesce_config(cfg, ml)
+    small_cfg = plans_lib.build_plan(cfg, ml).small_cfg
     small = build_model(small_cfg)
     model = build_model(cfg)
     hist = History()

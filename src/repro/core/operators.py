@@ -1,5 +1,6 @@
 """The paper's three operators on arbitrary models (Coalescing, De-coalescing,
-Interpolation), driven entirely by the per-leaf logical-axis metadata.
+Interpolation), driven by per-family :class:`~repro.core.plans.ProjectionPlan`
+objects over the per-leaf logical-axis metadata.
 
 For every width-coalescible logical axis (embed, mlp, heads, kv_heads, lora
 ranks, expert dims, ...) one shared set of projection matrices is built --
@@ -8,6 +9,13 @@ and norm scales automatically share their F.  The "layers" axis is handled by
 the depth matrices R/G per stage.  Protected axes (head_dim, rope dims,
 d_state, conv taps, vocab, per-head recurrent memories) are never projected;
 see DESIGN.md §4.
+
+Which axes coalesce, which are protected, and which per-leaf roles get
+rewritten (e.g. the MoE "experts" axis under expert merging) is decided by
+``repro.core.plans.build_plan`` -- ``coalesce_config`` / ``build_level_maps``
+here are thin compatibility wrappers over it, and every ``make_*_fn`` accepts
+an explicit ``plan=`` so callers that already built one (the V-cycle runner)
+don't re-derive it.
 
 Execution: for the paper's main "stack" width variant the F/T contractions are
 pair merges and duplications, so the leaves route through the matrix-free
@@ -19,122 +27,36 @@ trace-time, so ``vcycle`` level transitions remain host-round-trip-free.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.config import ModelConfig, MultiLevelConfig, Stage
+from repro.config import ModelConfig, MultiLevelConfig
 from repro.core import projections as proj
+from repro.core.plans import (LevelMaps, ProjectionPlan, WIDTH_AXES,
+                              axis_sizes, build_plan, normalize_overrides)
 from repro.kernels import dispatch as kdispatch
 from repro.param import Spec, is_spec
-
-# logical axes subject to width coalescing, with the config field giving their size
-WIDTH_AXES = (
-    "embed", "mlp", "heads", "kv_heads", "q_lora", "kv_lora",
-    "moe_mlp", "shared_mlp", "mamba_inner", "dt_rank", "experts", "embed_cat2",
-)
-
-
-def axis_sizes(cfg: ModelConfig) -> Dict[str, int]:
-    """Current size of every width-coalescible axis present in this model."""
-    s: Dict[str, int] = {"embed": cfg.d_model, "heads": cfg.n_heads,
-                         "kv_heads": cfg.n_kv_heads, "embed_cat2": 2 * cfg.d_model}
-    if cfg.d_ff:
-        s["mlp"] = cfg.d_ff
-    if cfg.attn_type == "mla":
-        s["q_lora"] = cfg.q_lora_rank
-        s["kv_lora"] = cfg.kv_lora_rank
-    if cfg.n_experts:
-        s["moe_mlp"] = cfg.moe_d_ff or cfg.d_ff
-        if cfg.n_shared_experts:
-            s["shared_mlp"] = cfg.n_shared_experts * (cfg.moe_d_ff or cfg.d_ff)
-        if cfg.coalesce_experts:
-            s["experts"] = cfg.n_experts
-    if any(b.mixer == "mamba" for st in cfg.stages for b in st.pattern):
-        s["mamba_inner"] = cfg.mamba_d_inner
-        s["dt_rank"] = cfg.resolved_dt_rank
-    return s
 
 
 def coalesce_config(cfg: ModelConfig, ml: Optional[MultiLevelConfig] = None,
                     *, width: bool = True, depth: bool = True) -> ModelConfig:
     """The next-level (smaller) model config: width and depth halved.
 
-    A dimension is halved iff it is even -- exactly the condition under which
-    ``build_level_maps`` constructs its width matrices, so config and
-    projected parameter shapes stay consistent for any architecture.
-    ``width``/``depth`` switches support the single-direction baselines
-    (StackBERT = depth-only, bert2BERT = width-only).
+    Compatibility wrapper over ``plans.build_plan(...).small_cfg`` -- the
+    halving rules live in the per-family hooks now, so config derivation and
+    map construction cannot drift apart.  ``width``/``depth`` switches support
+    the single-direction baselines (StackBERT = depth-only, bert2BERT =
+    width-only).
     """
-    halve = (lambda x: x // 2 if (x and x % 2 == 0) else x) if width else (lambda x: x)
-    if depth:
-        new_stages = tuple(Stage(st.pattern, (st.repeats + 1) // 2) for st in cfg.stages)
-    else:
-        new_stages = cfg.stages
-    kw: Dict[str, Any] = dict(
-        d_model=halve(cfg.d_model),
-        n_heads=halve(cfg.n_heads),
-        n_kv_heads=halve(cfg.n_kv_heads),
-        d_ff=halve(cfg.d_ff),
-        stages=new_stages,
-        head_dim=cfg.resolved_head_dim,  # head width preserved; heads merge whole
-    )
-    if cfg.attn_type == "mla":
-        kw.update(q_lora_rank=halve(cfg.q_lora_rank), kv_lora_rank=halve(cfg.kv_lora_rank))
-    if cfg.n_experts:
-        kw.update(moe_d_ff=halve(cfg.moe_d_ff))
-        if cfg.coalesce_experts:
-            kw.update(n_experts=halve(cfg.n_experts),
-                      moe_top_k=min(cfg.moe_top_k, halve(cfg.n_experts)))
-    if any(b.mixer == "mamba" for st in cfg.stages for b in st.pattern):
-        kw.update(mamba_dt_rank=halve(cfg.resolved_dt_rank))
-    if cfg.n_encoder_layers and depth:
-        kw.update(n_encoder_layers=(cfg.n_encoder_layers + 1) // 2)
-    if any(b.mixer == "cross_attn" for st in cfg.stages for b in st.pattern):
-        # the stub frontend's feature dim is fixed; pin it before halving d_model
-        kw.update(vision_dim=cfg.vision_dim or cfg.d_model)
-    return cfg.replace(**kw)
-
-
-@dataclasses.dataclass
-class LevelMaps:
-    """Projection matrices between a (large cfg, small cfg) level pair."""
-
-    width: Dict[str, proj.WidthMats]
-    depth: Dict[str, proj.DepthMats]  # per stage name + "encoder"
-
-    def as_jnp(self, dtype=jnp.float32) -> "LevelMaps":
-        width = {k: dataclasses.replace(
-                     v, **{f: jnp.asarray(getattr(v, f), dtype)
-                           for f in proj.MAT_FIELDS})
-                 for k, v in self.width.items()}
-        depth = {k: proj.DepthMats(R=jnp.asarray(v.R, dtype), G=jnp.asarray(v.G, dtype))
-                 for k, v in self.depth.items()}
-        return LevelMaps(width=width, depth=depth)
+    return build_plan(cfg, ml, width=width, depth=depth).small_cfg
 
 
 def build_level_maps(cfg: ModelConfig, ml: MultiLevelConfig,
                      *, width: bool = True, depth: bool = True) -> LevelMaps:
-    wmats: Dict[str, proj.WidthMats] = {}
-    if width:
-        sizes = axis_sizes(cfg)
-        for ax, n in sizes.items():
-            if ax == "embed_cat2":
-                continue
-            if n >= 2 and n % 2 == 0:
-                wmats[ax] = proj.width_mats(n, ml.width_variant)
-        if "embed" in wmats:
-            wmats["embed_cat2"] = proj.block_diag_width(wmats["embed"], 2)
-    dmats: Dict[str, proj.DepthMats] = {}
-    if depth:
-        for i, st in enumerate(cfg.stages):
-            dmats[f"stage_{i}"] = proj.depth_mats(st.repeats, ml.depth_variant)
-        if cfg.n_encoder_layers:
-            dmats["encoder"] = proj.depth_mats(cfg.n_encoder_layers, ml.depth_variant)
-    return LevelMaps(width=wmats, depth=dmats)
+    """Compatibility wrapper over ``plans.build_plan(...).build_maps()``."""
+    return build_plan(cfg, ml, width=width, depth=depth).build_maps()
 
 
 # ---------------------------------------------------------------------------
@@ -177,10 +99,13 @@ def _stack_decoalesce(w: jax.Array, dim: int, w0: float) -> jax.Array:
 
 
 def _width_leaf(w, spec: Spec, width: Dict[str, proj.WidthMats], direction: str,
-                coalesce_experts: bool, backend=None, fused: bool = True):
+                role_overrides, backend=None, fused: bool = True):
+    overrides = normalize_overrides(role_overrides)
     for d, (ax, role) in enumerate(zip(spec.axes, spec.roles)):
-        if ax == "experts" and coalesce_experts and "experts" in width:
-            role = "out"  # expert pair-averaging (beyond-paper extension)
+        if ax in overrides and ax in width:
+            # plan-level role rewrite, e.g. expert pair-averaging: the leaf
+            # declares "experts" protected, the MoE plan flips it to "out"
+            role = overrides[ax]
         if ax not in width or role not in ("in", "out"):
             continue
         m = width[ax]
@@ -209,14 +134,17 @@ def _depth_leaf(w, spec: Spec, dm: proj.DepthMats, direction: str):
 
 
 def _project_tree(params, specs, maps: LevelMaps, direction: str,
-                  coalesce_experts: bool, depth_key: Optional[str] = None,
+                  role_overrides=None, depth_key: Optional[str] = None,
                   backend: Optional[str] = None, fused: bool = True):
     """Recurse through the tree, tracking which stage we are under so the right
-    depth matrices apply."""
+    depth matrices apply.  ``role_overrides`` is the plan's per-axis role
+    rewrite dict (a bare bool is accepted for pre-plan call sites, meaning
+    ``cfg.coalesce_experts``)."""
+    role_overrides = normalize_overrides(role_overrides)
 
     def rec(p, s, dkey):
         if is_spec(s):
-            w = _width_leaf(p, s, maps.width, direction, coalesce_experts,
+            w = _width_leaf(p, s, maps.width, direction, role_overrides,
                             backend=backend, fused=fused)
             if dkey is not None and dkey in maps.depth:
                 w = _depth_leaf(w, s, maps.depth[dkey], direction)
@@ -235,20 +163,24 @@ def _project_tree(params, specs, maps: LevelMaps, direction: str,
 
 
 def coalesce(params, specs, cfg: ModelConfig, ml: MultiLevelConfig,
-             maps: Optional[LevelMaps] = None, *, fused: bool = True):
+             maps: Optional[LevelMaps] = None, *, fused: bool = True,
+             plan: Optional[ProjectionPlan] = None):
     """Paper Algorithm 2: width then depth (they commute on disjoint axes)."""
-    maps = (maps or build_level_maps(cfg, ml)).as_jnp()
-    return _project_tree(params, specs, maps, "coalesce", cfg.coalesce_experts,
+    plan = plan or build_plan(cfg, ml)
+    maps = (maps or plan.build_maps()).as_jnp()
+    return _project_tree(params, specs, maps, "coalesce", plan.role_overrides,
                          backend=cfg.kernel_backend or None, fused=fused)
 
 
 def decoalesce(params_small, specs, cfg: ModelConfig, ml: MultiLevelConfig,
-               maps: Optional[LevelMaps] = None, *, fused: bool = True):
+               maps: Optional[LevelMaps] = None, *, fused: bool = True,
+               plan: Optional[ProjectionPlan] = None):
     """Paper Algorithm 3: depth then width.  ``specs``/``cfg`` are the LARGE
     level's; ``params_small`` the small level's parameters."""
-    maps = (maps or build_level_maps(cfg, ml)).as_jnp()
+    plan = plan or build_plan(cfg, ml)
+    maps = (maps or plan.build_maps()).as_jnp()
     return _project_tree(params_small, specs, maps, "decoalesce",
-                         cfg.coalesce_experts,
+                         plan.role_overrides,
                          backend=cfg.kernel_backend or None, fused=fused)
 
 
@@ -266,28 +198,34 @@ def interpolate(params_large, params_decoalesced, alpha: float,
 
 def make_coalesce_fn(specs, cfg: ModelConfig, ml: MultiLevelConfig,
                      *, width: bool = True, depth: bool = True,
-                     fused: bool = True, out_shardings=None):
+                     fused: bool = True, out_shardings=None,
+                     plan: Optional[ProjectionPlan] = None):
     """jit'd level-transition.  "stack"-variant width axes route through the
     matrix-free fused kernels (repro.kernels.dispatch); everything else runs
     as sharded einsums.  ``fused=False`` forces the dense-matrix path (the
     equivalence oracle for tests/benchmarks).  ``out_shardings`` (a
     NamedSharding tree for the TARGET level's params) makes the projection
-    sharded-in, sharded-out under a mesh -- no host round trip, no gather."""
-    maps = build_level_maps(cfg, ml, width=width, depth=depth).as_jnp()
+    sharded-in, sharded-out under a mesh -- no host round trip, no gather.
+    Pass ``plan`` when one is already built (the V-cycle runner does); it must
+    match ``(cfg, ml, width, depth)``."""
+    plan = plan or build_plan(cfg, ml, width=width, depth=depth)
+    maps = plan.build_maps().as_jnp()
     backend = cfg.kernel_backend or None
     return jax.jit(lambda p: _project_tree(p, specs, maps, "coalesce",
-                                           cfg.coalesce_experts,
+                                           plan.role_overrides,
                                            backend=backend, fused=fused),
                    out_shardings=out_shardings)
 
 
 def make_decoalesce_fn(specs, cfg: ModelConfig, ml: MultiLevelConfig,
                        *, width: bool = True, depth: bool = True,
-                       fused: bool = True, out_shardings=None):
-    maps = build_level_maps(cfg, ml, width=width, depth=depth).as_jnp()
+                       fused: bool = True, out_shardings=None,
+                       plan: Optional[ProjectionPlan] = None):
+    plan = plan or build_plan(cfg, ml, width=width, depth=depth)
+    maps = plan.build_maps().as_jnp()
     backend = cfg.kernel_backend or None
     return jax.jit(lambda p: _project_tree(p, specs, maps, "decoalesce",
-                                           cfg.coalesce_experts,
+                                           plan.role_overrides,
                                            backend=backend, fused=fused),
                    out_shardings=out_shardings)
 
@@ -318,7 +256,7 @@ def make_draft_projection(specs, cfg: ModelConfig,
     full level-1 (both) is the cheapest draft the paper defines.
     """
     ml = ml or MultiLevelConfig()
-    draft_cfg = coalesce_config(cfg, ml, width=width, depth=depth)
+    plan = build_plan(cfg, ml, width=width, depth=depth)
     project = make_coalesce_fn(specs, cfg, ml, width=width, depth=depth,
-                               out_shardings=out_shardings)
-    return draft_cfg, project
+                               out_shardings=out_shardings, plan=plan)
+    return plan.small_cfg, project

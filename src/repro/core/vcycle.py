@@ -47,6 +47,7 @@ import numpy as np
 from repro.config import ModelConfig, MultiLevelConfig, TrainConfig
 from repro.core import flops as flops_lib
 from repro.core import operators as ops
+from repro.core import plans as plans_lib
 from repro.models.api import Model, build_model, make_train_step
 from repro.optim import adamw_init
 
@@ -322,12 +323,25 @@ class VCycleRunner:
         if grad_reduce is not None and mesh is None:
             raise ValueError("grad_reduce requires a mesh")
         self.grad_reduce = grad_reduce
+        # one ProjectionPlan per level transition: proj_plans[l] is the
+        # explicit family contract for level l <-> l+1 (which axes halve,
+        # which are protected, the role overrides, the carried MoE scalars).
+        # self.cfgs derives from the plans so config halving and the maps the
+        # transitions apply can never disagree.  NB ``self.plan`` (no s) is
+        # the *segment schedule* -- a different thing, and external consumers
+        # (benchmarks) read it by that name.
         self.cfgs = [cfg]
+        self.proj_plans = []
         for _ in range(ml.n_levels - 1):
-            self.cfgs.append(ops.coalesce_config(self.cfgs[-1], ml))
+            p = plans_lib.build_plan(self.cfgs[-1], ml)
+            self.proj_plans.append(p)
+            self.cfgs.append(p.small_cfg)
         self.models = [build_model(c) for c in self.cfgs]
         self.specs = [m.specs() for m in self.models]
         self.plan = segments(cfg, ml, tc, final_steps=final_steps)
+        if verbose:
+            for p in self.proj_plans:
+                print("[vcycle] " + p.describe().replace("\n", "\n[vcycle] "))
         self.state: Optional[VCycleState] = None
         self._step_fns: Dict[int, Callable] = {}
         self._shardings: Dict[int, Tuple[Any, Any]] = {}
@@ -476,13 +490,15 @@ class VCycleRunner:
                 print(f"[vcycle] level {l} init-trained {plan.steps} steps, coalescing")
             return ops.make_coalesce_fn(
                 self.specs[l], self.cfgs[l], self.ml,
-                out_shardings=self.level_shardings(l + 1)[0])(params)
+                out_shardings=self.level_shardings(l + 1)[0],
+                plan=self.proj_plans[l])(params)
         if plan.phase == "up":
             if self.verbose:
                 print(f"[vcycle] level {l} trained {plan.steps} steps, de-coalescing")
             target_sh = self.level_shardings(l - 1)[0]
             de = ops.make_decoalesce_fn(self.specs[l - 1], self.cfgs[l - 1],
-                                        self.ml, out_shardings=target_sh)(params)
+                                        self.ml, out_shardings=target_sh,
+                                        plan=self.proj_plans[l - 1])(params)
             # pop, don't read: the stash is consumed here, and dropping it
             # keeps later checkpoints from re-serializing dead full-size trees
             before = state.params_before.pop(l - 1)

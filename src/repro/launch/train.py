@@ -604,6 +604,10 @@ def main() -> None:
                          "(--no-ckpt-dedup writes the v2 whole-file layout)")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--describe-plans", action="store_true",
+                    help="print each V-cycle level transition's ProjectionPlan "
+                         "(family hooks, coalesced/protected axes, carried "
+                         "fields) and exit without training")
     args = ap.parse_args()
 
     # multi-process bring-up, then the mesh, must both happen before ANY
@@ -638,6 +642,16 @@ def main() -> None:
                "deit-proxy": paper_models.deit_proxy()}[args.arch]
     if args.f32:
         cfg = cfg.replace(compute_dtype=jnp.float32)
+    if args.describe_plans:
+        from repro.core import plans as plans_lib
+
+        ml = MultiLevelConfig(n_levels=args.levels, alpha=args.alpha)
+        c = cfg
+        for _ in range(ml.n_levels - 1):
+            p = plans_lib.build_plan(c, ml)
+            print(p.describe())
+            c = p.small_cfg
+        return
     tc = TrainConfig(steps=args.steps, warmup_steps=max(args.steps // 20, 1),
                      peak_lr=args.lr, batch_size=args.batch, seq_len=args.seq,
                      seed=args.seed, grad_compression=args.grad_compression)

@@ -38,6 +38,16 @@ class Model:
     def init(self, key: jax.Array):
         return init_tree(key, self.specs(), dtype=self.cfg.param_dtype)
 
+    def projection_plan(self, ml=None, *, width: bool = True,
+                        depth: bool = True):
+        """This model's :class:`~repro.core.plans.ProjectionPlan` for one
+        level transition: the family contract the V-cycle, baselines and the
+        serving draft projection all share (coalescible axes, protected axes,
+        role overrides, carried MoE scalars, ``small_cfg``)."""
+        from repro.core.plans import build_plan
+
+        return build_plan(self.cfg, ml, width=width, depth=depth)
+
     # -- losses ------------------------------------------------------------
     def loss(self, params, batch: Dict[str, jax.Array], z_loss: float = 0.0):
         cfg = self.cfg

@@ -134,3 +134,29 @@ def test_vcycle_and_baselines_share_one_accounting_basis():
 
 def hist_monotone(h):
     return bool(np.all(np.diff(h.flops) > 0))
+
+
+def test_flops_accounting_basis_is_pinned():
+    """The energy layer (ISSUE 9) is strictly additive: the FLOPs numbers the
+    existing dense arms produce are frozen here to literal values so any
+    accounting change (not just a relative drift) trips loudly."""
+    from helpers import tiny_moe
+
+    cfg = tiny_dense(d_model=32, d_ff=64, vocab_size=128)
+    model = build_model(cfg)
+    n_active = flops_lib.active_matmul_params(cfg, model.specs())
+    # embed 128*32 + 3 layers x (qkvo 32*96 + gated mlp 3*32*64 + norm/qk
+    # scale leaves 80) -- 2-D-or-higher leaves all count, 1-D norms don't
+    assert n_active == 31984.0
+    # MoE: expert weights charge at the top_k/n_experts active fraction
+    mcfg = tiny_moe(d_model=32, d_ff=64, vocab_size=128)
+    mmodel = build_model(mcfg)
+    full = flops_lib.total_params(mmodel.specs())
+    act = flops_lib.active_matmul_params(mcfg, mmodel.specs())
+    assert act < full  # 4 experts top-2 => expert leaves charged at 1/2
+    dense_fps = _fps(cfg, fast_tc(steps=1, batch_size=2, seq_len=16))
+    # 3x backward convention x (matmuls on 32 tokens + causal attention term)
+    attn = 32 * 3 * 2.0 * 4 * (8 + 8) * (16 / 2)
+    assert dense_fps == pytest.approx(3.0 * (2.0 * n_active * 32 + attn),
+                                      rel=1e-9)
+    assert dense_fps == 6435840.0

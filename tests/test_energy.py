@@ -1,0 +1,71 @@
+"""Pins for the energy/CO2 accounting layer (core/flops.py; DESIGN.md §7).
+
+These pin the MODEL, not hardware: joules = seconds x watts x PUE with
+seconds = flops/(util*peak) and watts linear between the idle floor and TDP.
+The FLOPs functions underneath stay pinned by tests/test_baselines.py.
+"""
+import pytest
+
+from repro.core import flops as flops_lib
+from repro.core.flops import DEVICES, US_GRID_KGCO2_PER_KWH, DevicePower, EnergyModel
+
+
+def test_seconds_is_flops_over_achieved_flops():
+    em = EnergyModel(DEVICES["tpu-v4"], utilization=0.5)
+    assert em.seconds(275e12) == pytest.approx(1.0 / 0.5, rel=1e-12)
+    # full utilization: exactly flops / peak
+    em1 = EnergyModel(DEVICES["tpu-v4"], utilization=1.0)
+    assert em1.seconds(275e12) == pytest.approx(1.0, rel=1e-12)
+
+
+def test_watts_interpolates_idle_floor_to_tdp():
+    d = DEVICES["a100"]
+    lo = EnergyModel(d, utilization=1e-9).watts()
+    hi = EnergyModel(d, utilization=1.0).watts()
+    assert lo == pytest.approx(d.tdp_watts * d.idle_frac, rel=1e-6)
+    assert hi == pytest.approx(d.tdp_watts, rel=1e-12)
+    mid = EnergyModel(d, utilization=0.4).watts()
+    assert lo < mid < hi
+
+
+def test_joules_identity_and_linearity():
+    em = EnergyModel(DEVICES["h100"], utilization=0.4, pue=1.25)
+    f = 1e18
+    assert em.joules(f) == pytest.approx(em.seconds(f) * em.watts() * 1.25,
+                                         rel=1e-12)
+    # energy is linear in FLOPs => a FLOPs saving IS the energy saving
+    assert em.joules(2 * f) == pytest.approx(2 * em.joules(f), rel=1e-12)
+    assert em.kgco2e(f) == pytest.approx(
+        em.joules(f) / 3.6e6 * US_GRID_KGCO2_PER_KWH, rel=1e-12)
+
+
+def test_report_and_convenience_wrapper_agree():
+    r = flops_lib.energy_report(1e15, "tpu-v4", utilization=0.3, pue=1.1)
+    em = EnergyModel(DEVICES["tpu-v4"], utilization=0.3, pue=1.1)
+    assert r["joules"] == pytest.approx(em.joules(1e15), rel=1e-12)
+    assert r["kwh"] == pytest.approx(r["joules"] / 3.6e6, rel=1e-12)
+    assert r["kgco2e"] == pytest.approx(r["kwh"] * US_GRID_KGCO2_PER_KWH,
+                                        rel=1e-12)
+    assert r["device"] == "tpu-v4" and r["flops"] == 1e15
+
+
+def test_validation_rejects_nonsense():
+    with pytest.raises(ValueError):
+        DevicePower("bad", peak_flops=0.0, tdp_watts=100.0, idle_frac=0.1)
+    with pytest.raises(ValueError):
+        DevicePower("bad", peak_flops=1e12, tdp_watts=100.0, idle_frac=1.0)
+    with pytest.raises(ValueError):
+        EnergyModel(DEVICES["tpu-v4"], utilization=0.0)
+    with pytest.raises(ValueError):
+        EnergyModel(DEVICES["tpu-v4"], utilization=1.5)
+    with pytest.raises(ValueError):
+        EnergyModel(DEVICES["tpu-v4"], pue=0.9)
+    with pytest.raises(ValueError):
+        EnergyModel(DEVICES["tpu-v4"], grid_kgco2_per_kwh=-1.0)
+
+
+def test_every_catalog_device_is_sane():
+    for name, d in DEVICES.items():
+        assert d.name == name
+        r = flops_lib.energy_report(1e15, name)
+        assert r["seconds"] > 0 and r["joules"] > 0 and r["kgco2e"] > 0

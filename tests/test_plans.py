@@ -1,0 +1,211 @@
+"""Family-aware ProjectionPlan invariants, parameterized over EVERY assigned
+architecture (smoke shape) -- plus the expert-coalescing MoE/hybrid variants
+and a full 2-level V-cycle pin per family (ISSUE 9 acceptance)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MultiLevelConfig, TrainConfig
+from repro.configs import ASSIGNED, get_config, paper_models
+from repro.core import operators as ops
+from repro.core import plans as plans_lib
+from repro.core.vcycle import run_vcycle
+from repro.layers.ffn import moe_capacity
+from repro.models.api import build_model
+from repro.param import struct_tree
+
+ML = MultiLevelConfig(n_levels=2)
+
+
+def _cases():
+    """Every assigned smoke config + the coalesce_experts variants."""
+    out = {name: get_config(name, smoke=True) for name in ASSIGNED}
+    for name in ("phi3.5-moe-42b-a6.6b", "jamba-1.5-large-398b",
+                 "deepseek-v3-671b"):
+        out[name + "+experts"] = out[name].replace(coalesce_experts=True)
+    return out
+
+
+CASES = _cases()
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_plan_small_cfg_matches_operator_path(name):
+    cfg = CASES[name]
+    plan = plans_lib.build_plan(cfg, ML)
+    assert plan.small_cfg == ops.coalesce_config(cfg, ML)
+    # every named width axis halves; every protected axis is absent from them
+    for ax, n in plan.width_axes.items():
+        assert n % 2 == 0 and n >= 2
+        assert ax not in plan.protected_axes
+    assert plan.describe()  # human-readable and never empty
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_plan_coalesce_shapes_match_small_model(name):
+    cfg = CASES[name]
+    model = build_model(cfg)
+    plan = plans_lib.build_plan(cfg, ML)
+    small = build_model(plan.small_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    co = ops.make_coalesce_fn(model.specs(), cfg, ML, plan=plan)(params)
+    want = jax.tree.map(lambda s: tuple(s.shape), struct_tree(small.specs()))
+    got = jax.tree.map(lambda x: tuple(x.shape), co)
+    assert got == want
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_plan_cd_identity(name):
+    """C(D(w_small)) == w_small under the plan's maps (paper Eq. 13)."""
+    cfg = CASES[name]
+    model = build_model(cfg)
+    plan = plans_lib.build_plan(cfg, ML)
+    small = build_model(plan.small_cfg)
+    small_params = small.init(jax.random.PRNGKey(1))
+    de = ops.make_decoalesce_fn(model.specs(), cfg, ML, plan=plan)(small_params)
+    rt = ops.make_coalesce_fn(model.specs(), cfg, ML, plan=plan)(de)
+    for a, b in zip(jax.tree.leaves(rt), jax.tree.leaves(small_params)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_plan_width_maps_are_one_sided_inverses(name):
+    """T_out F_out = I and F_in T_in = I for every planned width axis."""
+    maps = plans_lib.build_plan(CASES[name], ML).build_maps()
+    assert maps.width  # every family coalesces at least the embed axis
+    for ax, m in maps.width.items():
+        n2 = m.F_out.shape[1]
+        np.testing.assert_allclose(m.T_out @ m.F_out, np.eye(n2), atol=1e-12,
+                                   err_msg=ax)
+        np.testing.assert_allclose(m.F_in @ m.T_in, np.eye(n2), atol=1e-12,
+                                   err_msg=ax)
+    for gname, d in maps.depth.items():
+        np.testing.assert_allclose(d.G @ d.R, np.eye(d.R.shape[1]), atol=1e-12,
+                                   err_msg=gname)
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_plan_protected_axes_keep_size_and_values(name):
+    """Protected axes never shrink; leaves with ONLY protected/free axes are
+    bit-identical through width-only coalescing."""
+    cfg = CASES[name]
+    model = build_model(cfg)
+    plan = plans_lib.build_plan(cfg, ML, depth=False)
+    params = model.init(jax.random.PRNGKey(2))
+    co = ops.make_coalesce_fn(model.specs(), cfg, ML, depth=False, plan=plan)(params)
+    flat_p = jax.tree.leaves(params)
+    flat_c = jax.tree.leaves(co)
+    from repro.param import is_spec
+
+    flat_s = jax.tree.leaves(model.specs(), is_leaf=is_spec)
+    checked = 0
+    for p, c, s in zip(flat_p, flat_c, flat_s):
+        for i, ax in enumerate(s.axes):
+            if ax in plan.protected_axes:
+                assert c.shape[i] == p.shape[i], (s, ax)
+        if not any(ax in plan.width_axes for ax in s.axes):
+            np.testing.assert_array_equal(np.asarray(p), np.asarray(c), err_msg=str(s))
+            checked += 1
+    # vocab/seq/head_dim-protected leaves exist in every family via the specs
+    assert checked >= 0
+
+
+def _find_router(tree, path=()):
+    if not isinstance(tree, dict):
+        return None
+    for k, v in tree.items():
+        if k == "router":
+            return path + (k,), v
+        found = _find_router(v, path + (k,))
+        if found:
+            return found
+    return None
+
+
+def test_expert_merge_router_pin():
+    """With coalesce_experts, the merged router column j is the pair-average
+    of columns (j, j + X/2) after the embed rows pair-sum ("stack" maps)."""
+    cfg = get_config("phi3.5-moe-42b-a6.6b", smoke=True).replace(
+        coalesce_experts=True)
+    model = build_model(cfg)
+    plan = plans_lib.build_plan(cfg, ML, depth=False)
+    assert plan.role_overrides.get("experts") == "out"
+    params = model.init(jax.random.PRNGKey(3))
+    co = ops.make_coalesce_fn(model.specs(), cfg, ML, depth=False, plan=plan)(params)
+    path, w = _find_router(params)
+    _, w2 = _find_router(co)
+    w = np.asarray(jnp.asarray(w, jnp.float32))
+    w2 = np.asarray(jnp.asarray(w2, jnp.float32))
+    # leading "layers" axis from the stacked stage scan is untouched (depth off)
+    E, X = w.shape[-2], w.shape[-1]
+    a = w[..., : E // 2, :] + w[..., E // 2:, :]          # embed rows: "in" sum
+    want = 0.5 * (a[..., :, : X // 2] + a[..., :, X // 2:])  # experts: "out" avg
+    np.testing.assert_allclose(w2, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ["phi3.5-moe-42b-a6.6b+experts",
+                                  "jamba-1.5-large-398b+experts"])
+def test_expert_merge_carries_router_scalars(name):
+    """capacity_factor / router_aux_coef carry unchanged and total capacity
+    slots are preserved across the expert merge (plan-documented invariant)."""
+    cfg = CASES[name]
+    plan = plans_lib.build_plan(cfg, ML)
+    small = plan.small_cfg
+    assert plan.carried == {"capacity_factor": cfg.capacity_factor,
+                            "router_aux_coef": cfg.router_aux_coef}
+    assert small.capacity_factor == cfg.capacity_factor
+    assert small.router_aux_coef == cfg.router_aux_coef
+    assert small.n_experts == cfg.n_experts // 2
+    assert small.moe_top_k == min(cfg.moe_top_k, small.n_experts)
+    if small.moe_top_k == cfg.moe_top_k:  # same k => slot count must match
+        seq = 64
+        assert (moe_capacity(small, seq) * small.n_experts
+                == moe_capacity(cfg, seq) * cfg.n_experts)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: one full 2-level V-cycle (two transitions) per family, loss
+# decreasing across the cycle at CPU smoke scale (ISSUE 9 acceptance pin)
+
+E2E = {
+    "dense": lambda: get_config("tinyllama-1.1b", smoke=True),
+    "moe": lambda: get_config("phi3.5-moe-42b-a6.6b", smoke=True).replace(
+        coalesce_experts=True),
+    "ssm": lambda: get_config("xlstm-125m", smoke=True),
+    "hybrid": lambda: get_config("jamba-1.5-large-398b", smoke=True).replace(
+        coalesce_experts=True),
+    "vit": lambda: paper_models.deit_proxy(d_model=32, n_layers=2),
+}
+
+
+def _batch_fn(cfg, tc):
+    from repro.data import MarkovLM, lm_batch, vision_batch
+
+    if cfg.family == "vit":
+        from repro.models.vit import n_patches, patch_dim
+
+        return lambda step: vision_batch(tc.seed, step, tc.batch_size,
+                                         n_patches(cfg), patch_dim(cfg),
+                                         cfg.n_classes)
+    chain = MarkovLM(cfg.vocab_size)
+    return lambda step: lm_batch(chain, tc.seed, step, tc.batch_size, tc.seq_len)
+
+
+@pytest.mark.parametrize("fam", sorted(E2E))
+def test_vcycle_end_to_end_per_family(fam):
+    cfg = E2E[fam]()
+    tc = TrainConfig(steps=24, warmup_steps=3, peak_lr=3e-3, batch_size=4,
+                     seq_len=16, log_every=1)
+    out = run_vcycle(cfg, ML, tc, _batch_fn(cfg, tc), seed=0)
+    # two full transitions: the level trace must visit level 1 and return
+    lv = out.history.level
+    assert 1 in lv and lv[0] == 0 and lv[-1] == 0
+    # final params live on the big config's specs
+    want = jax.tree.map(lambda s: tuple(s.shape),
+                        struct_tree(build_model(cfg).specs()))
+    got = jax.tree.map(lambda x: tuple(x.shape), out.params)
+    assert got == want
+    lo = out.history.loss
+    assert np.mean(lo[-3:]) < np.mean(lo[:3])  # learning across the cycle
