@@ -5,20 +5,22 @@ block tables and prefix reuse (default), or the dense-slot oracle engine
 (--engine slots; required for SSM/hybrid mixers like jamba).  With
 --policy speculative the paged engine self-drafts k tokens per tick from
 the coalesced level-1 projection of its own weights and verifies them in
-one batched full-model step (lossless for greedy decode).
+one batched full-model step (lossless for greedy decode).  --mesh DxM
+shards the paged decode step (model-sharded K/V page pools), and
+--reload-from polls a trainer's checkpoint dir for live weight reloads --
+swaps land at tick boundaries, never dropping in-flight requests.
 
     PYTHONPATH=src python examples/serve_decode.py --arch tinyllama-1.1b
     PYTHONPATH=src python examples/serve_decode.py --arch tinyllama-1.1b --engine slots
     PYTHONPATH=src python examples/serve_decode.py --arch tinyllama-1.1b --policy speculative
+    PYTHONPATH=src python examples/serve_decode.py --arch tinyllama-1.1b --mesh 1x2
+    PYTHONPATH=src python examples/serve_decode.py --reload-from /tmp/vcycle_pretrain_ckpt
     PYTHONPATH=src python examples/serve_decode.py --arch jamba-1.5-large-398b --engine slots
 """
 import argparse
 import time
 
 import numpy as np
-
-from repro.configs import get_config
-from repro.launch.serve import PagedServer, Request, make_server
 
 
 def main():
@@ -31,14 +33,40 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--mesh", default="",
+                    help="DxM serving mesh, e.g. 1x2 (paged engine only; "
+                         "host CPU devices are forced at smoke scale)")
+    ap.add_argument("--reload-from", default="",
+                    help="checkpoint dir to poll for live weight reloads "
+                         "(a trainer's --ckpt-dir)")
+    ap.add_argument("--poll-every", type=int, default=1)
     args = ap.parse_args()
+
+    # the mesh must exist before anything touches the backend: forcing host
+    # devices is env-var-only and silently too late after jax initializes
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_cli_mesh
+
+        mesh = make_cli_mesh(args.mesh)
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_config
+    from repro.launch.serve import (ManifestWatcher, PagedServer, Request,
+                                    make_server)
 
     cfg = get_config(args.arch, smoke=True)
     print(f"serving {cfg.name} (smoke config), engine={args.engine}, "
-          f"policy={args.policy}, continuous batch={args.batch}")
+          f"policy={args.policy}, continuous batch={args.batch}"
+          + (f", mesh={args.mesh}" if args.mesh else ""))
     srv = make_server(cfg, engine=args.engine, batch=args.batch, max_seq=96,
                       page_size=args.page_size, policy=args.policy,
-                      draft_k=args.draft_k)
+                      draft_k=args.draft_k, mesh=mesh)
+    watcher = None
+    if args.reload_from:
+        mgr = CheckpointManager(args.reload_from)
+        watcher = ManifestWatcher(mgr, like=srv.params,
+                                  shardings=getattr(srv, "_param_shardings", None))
+        srv.attach_watcher(watcher, poll_every=args.poll_every)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=rng.integers(4, 16)),
                     max_new=args.max_new) for i in range(args.requests)]
@@ -56,6 +84,9 @@ def main():
             print(f"  speculative: accept={st['accept_rate']:.2f} over "
                   f"{st['drafted_tokens']} drafted tokens "
                   f"(draft {st['draft_time_s']:.2f}s / verify {st['verify_time_s']:.2f}s)")
+    if watcher is not None:
+        print(f"  reloads: {srv.reloads} swaps, steps_seen={watcher.steps_seen}, "
+              f"skipped={watcher.steps_skipped}, last={watcher.last_reload_stats}")
     for r in done[:4]:
         print(f"  req {r.rid}: {len(r.prompt)} prompt toks -> {r.out[:10]}")
 

@@ -65,6 +65,10 @@ def main():
                     help="model family to pre-train (tiny same-family config)")
     ap.add_argument("--full-100m", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/vcycle_pretrain_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50,
+                    help="checkpoint every N global steps; a live server "
+                         "polling --ckpt-dir (serve --reload-from) swaps "
+                         "each published step in by digest diff")
     args = ap.parse_args()
 
     if args.full_100m:
@@ -82,7 +86,7 @@ def main():
     tc = TrainConfig(steps=args.steps, warmup_steps=max(args.steps // 20, 1),
                      peak_lr=6e-4, batch_size=8, seq_len=seq, log_every=10)
     ckpt = CheckpointManager(args.ckpt_dir)
-    out = train_vcycle_ckpt(cfg, ml, tc, ckpt=ckpt, ckpt_every=50)
+    out = train_vcycle_ckpt(cfg, ml, tc, ckpt=ckpt, ckpt_every=args.ckpt_every)
     print(f"done; final loss {out.history.loss[-1]:.4f}; "
           f"checkpoint in {args.ckpt_dir}")
 

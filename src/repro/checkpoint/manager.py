@@ -336,8 +336,8 @@ class CheckpointManager:
         all still held somewhere is ``_gather_objects``' job, which fails
         loudly rather than restarting from scratch.
         """
-        from repro.distributed import (barrier, kv_allgather,
-                                       kv_delete_stream, kv_fetch_stream,
+        from repro.distributed import (barrier, kv_delete_stream,
+                                       kv_fetch_stream, kv_json_allgather,
                                        kv_put_stream)
 
         pid, n = jax.process_index(), jax.process_count()
@@ -347,8 +347,7 @@ class CheckpointManager:
         # by the elected winner alone (N-1 broadcast copies would be dead
         # weight in coordinator RAM)
         m = self._latest_uncoordinated()
-        cands = [json.loads(p) for p in kv_allgather(
-            f"{tag}-cand", json.dumps(m).encode())]
+        cands = kv_json_allgather(f"{tag}-cand", m)
         ranked = [(c["step"], c["dir"], r) for r, c in enumerate(cands)
                   if c is not None]
         if not ranked:
@@ -378,6 +377,52 @@ class CheckpointManager:
         if trees is None:
             trees = self._remote_trees.get(m["dir"])
         return trees
+
+    def step_manifest(self, m: Dict[str, Any]) -> Optional[Dict[str, Any]]:
+        """Public accessor for the content-addressed (v3) manifest of the
+        step ``m`` (a :meth:`latest` result) references: ``{tree_key ->
+        {leaf_path -> {shape, dtype, chunks:[{digest, ...}]}}}``.
+
+        This is the digest-level view live consumers diff against what they
+        already hold (``launch/serve.ManifestWatcher``).  Returns None for
+        steps written in a pre-content-addressed (v1/v2) layout, which carry
+        no digests to diff.
+        """
+        return self._step_trees(m)
+
+    def assemble_diff(self, trees: Dict[str, Any], key: str,
+                      leaves) -> Dict[str, np.ndarray]:
+        """Host arrays for exactly ``leaves`` of tree ``key`` -- the
+        digest-diff restore behind live weight reload.
+
+        The caller (``ManifestWatcher``) has already diffed the manifest's
+        per-leaf chunk digests against what it holds and passes only the
+        CHANGED leaf paths; unchanged leaves ship zero bytes because they are
+        simply never read.  In no-shared-FS (``local=True``) multi-process
+        mode the peer gather is pruned to the changed digests, so only those
+        cross the wire (``last_gather_stats`` records the split); in
+        shared-dir mode the stats are synthesized with the same shape so
+        consumers can assert the diff either way.  Every process of a
+        multi-process serving job must call this collectively.
+        """
+        entries = {k: trees[key][k] for k in leaves}
+        needed = {ch["digest"] for rec in entries.values()
+                  for ch in rec["chunks"]}
+        if self.local and jax.process_count() > 1:
+            self._gather_objects(trees, needed=needed)
+        else:
+            pools = self._pools()
+            all_digests = sorted(set(store_lib.manifest_digests(trees)))
+            have = [d for d in all_digests if any(p.has(d) for p in pools)]
+            self.last_gather_stats = {
+                "manifest": len(all_digests), "needed": len(needed),
+                "skipped": len(all_digests) - len(needed), "held": len(have),
+                "fetched": len(needed - set(have)), "served": 0}
+        # assemble from a FILTERED manifest rather than assemble_tree's
+        # ``needed=`` pruning: the latter still materializes every leaf
+        # (unfetched regions as garbage), while reload must only ever touch
+        # the changed ones
+        return store_lib.assemble_tree(entries, self._pools())
 
     def _step_dirs(self) -> list:
         """Published step dirs, oldest-publish first.
@@ -596,7 +641,7 @@ class CheckpointManager:
         process's own pool, only digests cross the network.  Every process
         publishes the merged manifest into its own dir, so any surviving host
         is self-describing and per-host refcount GC stays local."""
-        from repro.distributed import barrier, kv_allgather
+        from repro.distributed import barrier, kv_json_allgather
 
         self._kv_seq += 1
         tag = f"{self._scope}-save-{self._kv_seq}"
@@ -608,8 +653,7 @@ class CheckpointManager:
         # each rank puts its index only after its objects are durable, so the
         # allgather doubles as the write barrier; the merge is deterministic
         # (rank-ordered parts), so every rank computes the identical manifest
-        parts = [json.loads(p) for p in kv_allgather(
-            f"{tag}-idx", json.dumps(index).encode())]
+        parts = kv_json_allgather(f"{tag}-idx", index)
         trees = {key: store_lib.merge_tree_entries(
                      [p.get(key, {}) for p in parts]) for key in state}
         tmp = os.path.join(self.dir, name + ".tmp")
@@ -736,8 +780,8 @@ class CheckpointManager:
         cache the bytes into their own pool (so the next save dedups against
         them).  Raises if a wanted digest is held by no process.
         """
-        from repro.distributed import (barrier, kv_allgather,
-                                       kv_delete_stream, kv_fetch_stream,
+        from repro.distributed import (barrier, kv_delete_stream,
+                                       kv_fetch_stream, kv_json_allgather,
                                        kv_put_stream)
 
         pid, n = jax.process_index(), jax.process_count()
@@ -749,8 +793,8 @@ class CheckpointManager:
         mine = all_digests if needed is None else sorted(
             set(all_digests) & set(needed))
         want = sorted(set(mine) - set(have))
-        lists = [json.loads(p) for p in kv_allgather(
-            f"{tag}-lists", json.dumps({"have": have, "want": want}).encode())]
+        lists = kv_json_allgather(f"{tag}-lists",
+                                  {"have": have, "want": want})
         haves = {r: set(lists[r]["have"]) for r in range(n)}
         wanted = sorted(set().union(*[set(lists[r]["want"])
                                       for r in range(n)]))

@@ -22,6 +22,7 @@ Three multi-process facts the rest of the codebase leans on:
 """
 from __future__ import annotations
 
+import json
 from typing import Any, Optional
 
 import jax
@@ -187,6 +188,19 @@ def kv_allgather(tag: str, payload: bytes,
         for r in range(n):
             kv_delete(f"{tag}-{r}")
     return out
+
+
+def kv_json_allgather(tag: str, obj: Any,
+                      timeout_ms: int = _BARRIER_TIMEOUT_MS) -> list:
+    """:func:`kv_allgather` for JSON-serializable objects.
+
+    Every process contributes ``obj``; returns all processes' decoded
+    objects, rank-ordered and identical everywhere.  The checkpoint manager's
+    control-plane exchanges (latest-candidate election, per-host manifest
+    index merge, have/want object negotiation) all ride this.
+    """
+    return [json.loads(p) for p in
+            kv_allgather(tag, json.dumps(obj).encode(), timeout_ms)]
 
 
 def any_process_flag(flag: bool) -> bool:

@@ -19,6 +19,12 @@ The ("data","model") mesh then spans all processes' devices; each process
 feeds its own data shard, process 0 owns logging and the checkpoint manifest,
 and every process writes only its addressable checkpoint shards (see
 ``repro.checkpoint``).
+
+The same ``--mesh DxM`` flag (and the same axis names) drives the serving
+side: ``launch/serve.py``'s ``make_server(cfg, mesh=...)`` places the paged
+K/V page pool model-sharded along ``"model"`` with replicated block tables,
+so a decode fleet reuses this module's mesh construction unchanged (see
+launch/README.md, "Mesh-sharded paged decode").
 """
 from __future__ import annotations
 

@@ -128,6 +128,17 @@ class PrefixCache:
         if d is not None:
             del self._by_digest[d]
 
+    def clear(self) -> int:
+        """Drop every entry; returns how many were dropped.
+
+        The pages themselves stay live (their holders keep reading them) --
+        they just stop being discoverable by new arrivals.
+        """
+        n = len(self._by_digest)
+        self._by_digest.clear()
+        self._by_page.clear()
+        return n
+
     def __len__(self) -> int:
         return len(self._by_digest)
 
@@ -154,6 +165,7 @@ class BlockAllocator:
         self.reserved: Dict[int, int] = {}     # rid -> worst-case positions
         self._prompt_len: Dict[int, int] = {}
         self.rolled_back_total = 0             # positions rewound across rollbacks
+        self.invalidations_total = 0           # prefix-cache wipes (weight swaps)
 
     def pages_needed(self, total_positions: int) -> int:
         return -(-total_positions // self.page_size)
@@ -238,6 +250,21 @@ class BlockAllocator:
         self.written[rid] = self.lengths[rid]
         self.rolled_back_total += rolled
         return rolled
+
+    def invalidate_prefix(self) -> int:
+        """Wipe the prefix cache after a weight swap; returns entries dropped.
+
+        Cached prompt pages hold K/V computed under the *old* params, so a
+        post-swap arrival must never match them: a digest commits to the
+        token content of a prefix, not to the weights that encoded it.  Pages
+        held by in-flight requests keep their refcounts (those requests
+        finish under the old weights and still read them) -- the entries just
+        leave the cache, exactly as ``complete`` would evict them one by one.
+        """
+        if self.prefix is None:
+            return 0
+        self.invalidations_total += 1
+        return self.prefix.clear()
 
     def complete(self, rid: int) -> None:
         """Release the request's pages; a shared page survives until its last

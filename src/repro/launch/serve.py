@@ -33,6 +33,21 @@ The driver is split into two orthogonal layers:
         identical to GreedyPolicy regardless of draft quality -- a bad draft
         only costs accept rate, never correctness.
 
+Two orthogonal production seams sit on top:
+
+  * **live weight reload** -- a ``ManifestWatcher`` polls the checkpoint
+    store's ``manifest.json`` (shared-dir or no-shared-FS KV mode), diffs the
+    new step's per-leaf chunk digests against what it already landed, and
+    ships ONLY the changed leaves; the engine stages the result
+    (``request_reload``) and swaps via ``set_params`` at a tick boundary
+    once every in-flight request has drained -- zero dropped requests, the
+    speculative draft re-projects, and the prefix cache is invalidated.
+  * **mesh-sharded paged decode** -- ``PagedServer(mesh=...)`` jits the SAME
+    ``make_paged_decode_step`` the ``decode_*`` dry-run cells compile with
+    explicit shardings: params laid out by the serve rules, K/V page pools
+    model-sharded over the kv-head axis (GQA; MLA's latent pools carry no
+    head axis and replicate), block tables/tokens/positions replicated.
+
 See ``src/repro/launch/README.md`` for the architecture notes.
 """
 from __future__ import annotations
@@ -40,12 +55,14 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import (CheckpointManager, _flatten, _put,
+                                      _unflatten_into)
 from repro.config import MultiLevelConfig
 from repro.configs import get_config
 from repro.core import operators as ops
@@ -53,7 +70,7 @@ from repro.launch.paging import NULL_PAGE, BlockAllocator
 from repro.models import lm as lm_lib
 from repro.models.api import (build_model, make_paged_decode_step,
                               make_prefill_step, make_serve_step,
-                              make_verify_step)
+                              make_verify_step, serve_shardings)
 from repro.param import Spec, is_spec
 
 
@@ -388,6 +405,102 @@ class SpeculativePolicy(DecodePolicy):
 
 
 # ---------------------------------------------------------------------------
+# live weight reload
+
+
+class ManifestWatcher:
+    """Polls a checkpoint store's ``manifest.json`` and lands new serving
+    weights by digest diff -- the train->serve hand-off channel.
+
+    Per :meth:`poll`:
+
+      1. ``mgr.latest()`` reads the store's current manifest -- a cheap
+         atomic-file read in shared-dir mode, the coordinated candidate
+         election in no-shared-FS (``local=True``) KV mode.  In KV mode both
+         ``latest`` and the object gather are collectives, so every process
+         of a multi-process serving job must drive its watcher at the same
+         tick (``EngineCore.attach_watcher`` does).
+      2. Steps already examined are skipped, as are steps whose ``params``
+         tree does not structurally match the serving model: a mid-V-cycle
+         checkpoint carries COALESCED (smaller-shape) params -- only
+         level-0-shaped weights are servable.
+      3. Each leaf's chunk-digest tuple is diffed against what the watcher
+         landed last time; only CHANGED leaves are assembled and device_put
+         (``CheckpointManager.assemble_diff``).  Unchanged leaves return the
+         previously landed arrays -- zero bytes read, zero bytes shipped
+         (``tests/test_reload.py`` pins object identity).
+
+    The result is handed to ``EngineCore.request_reload``, which swaps at a
+    tick boundary without dropping in-flight requests.
+    """
+
+    def __init__(self, mgr: CheckpointManager, like, shardings=None,
+                 key: str = "params"):
+        self.mgr = mgr
+        self.key = key
+        self.like = like
+        self._flat_like = _flatten(like)
+        self._flat_sh = _flatten(shardings) if shardings is not None else {}
+        self.last_step = -1                # newest step actually landed
+        self._seen = -1                    # newest step examined (incl. skips)
+        self._sig: Dict[str, Tuple[str, ...]] = {}
+        self._landed: Dict[str, Any] = {}
+        self.steps_seen: List[int] = []
+        self.steps_skipped: List[int] = []
+        self.reload_history: List[Dict[str, Any]] = []
+        self.last_reload_stats: Dict[str, Any] = {}
+        self.poll_errors = 0
+
+    def _shapes_match(self, entries) -> bool:
+        if set(entries) != set(self._flat_like):
+            return False
+        return all(tuple(entries[k]["shape"]) ==
+                   tuple(np.shape(self._flat_like[k])) for k in entries)
+
+    def poll(self) -> Optional[Tuple[int, Any]]:
+        """``(step, params)`` when new weights landed, else None."""
+        m = self.mgr.latest()
+        if m is None or int(m["step"]) <= self._seen:
+            return None
+        step = int(m["step"])
+        try:
+            trees = self.mgr.step_manifest(m)
+            if trees is None:
+                raise ValueError(
+                    "live reload needs the content-addressed (v3) checkpoint "
+                    "layout; this step publishes no digest manifest to diff "
+                    "(saved with dedup=False?)")
+            entries = trees.get(self.key, {})
+            if not self._shapes_match(entries):
+                self._seen = step
+                self.steps_skipped.append(step)
+                return None
+            sig = {k: tuple(ch["digest"] for ch in rec["chunks"])
+                   for k, rec in entries.items()}
+            changed = sorted(k for k in sig if self._sig.get(k) != sig[k])
+            flat_new = self.mgr.assemble_diff(trees, self.key, changed)
+        except FileNotFoundError:
+            # racing the trainer's keep-last GC: the step dir or one of its
+            # objects vanished between the manifest read and assembly.  A
+            # newer publish exists by definition -- catch it next poll.
+            self.poll_errors += 1
+            return None
+        for k in changed:
+            self._landed[k] = _put(flat_new[k], self._flat_like[k],
+                                   self._flat_sh.get(k))
+        self._sig = sig
+        self._seen = self.last_step = step
+        self.steps_seen.append(step)
+        self.last_reload_stats = {
+            "step": step, "leaves": len(sig), "changed": len(changed),
+            "reused": len(sig) - len(changed),
+            **{f"gather_{k}": v
+               for k, v in self.mgr.last_gather_stats.items()}}
+        self.reload_history.append(self.last_reload_stats)
+        return step, _unflatten_into(dict(self._landed), self.like)
+
+
+# ---------------------------------------------------------------------------
 # scheduler core + engines
 
 
@@ -413,6 +526,12 @@ class EngineCore:
         self.done: List[Request] = []
         self.rejected: List[Request] = []  # oversized prompts (see admit)
         self.policy = policy or GreedyPolicy()
+        # hot-reload state: staged weights swap at a tick boundary once every
+        # in-flight request drains (see request_reload / maybe_swap)
+        self._pending_params = None
+        self.reloads = 0
+        self._watcher: Optional[ManifestWatcher] = None
+        self._watch_every = 1
         # subclasses call self.policy.bind(self) once fully constructed
 
     # -- engine hooks (overridden) ------------------------------------------
@@ -429,6 +548,18 @@ class EngineCore:
 
     def _reset_engine(self) -> None:
         pass
+
+    def _place_params(self, params):
+        """Engine hook: commit reloaded params to the engine's device layout
+        (the mesh-sharded paged engine device_puts onto its param
+        shardings; host trees land as-is everywhere else)."""
+        return params
+
+    def _on_params_engine(self) -> None:
+        """Engine hook: serving params changed.  The paged engine wipes its
+        prefix cache here -- cached prompt K/V was computed under the old
+        weights, and a digest commits to token content, not to the weights
+        that encoded it."""
 
     def decode_once(self) -> np.ndarray:
         """One full-model decode step over all rows -> next-token argmaxes
@@ -456,6 +587,13 @@ class EngineCore:
         write silently dropped and decoded garbage."""
         if not self.fits(req):
             raise ValueError(self._admit_error(req))
+        if self._pending_params is not None:
+            # a staged weight swap drains the engine first: admitting now
+            # would start this request on the OLD weights, breaking the
+            # reload contract (post-reload admissions == fresh server on the
+            # new weights).  The request waits at the queue head; the swap
+            # happens at the next drained tick and admission resumes.
+            return False
         row = next((i for i, r in enumerate(self.active) if r is None), None)
         if row is None:
             return False
@@ -491,6 +629,10 @@ class EngineCore:
         pass
 
     def step(self) -> None:
+        # the tick boundary: a staged reload lands the moment the engine is
+        # drained -- BEFORE the idle early-out, or a pending swap with an
+        # empty engine and a waiting queue would never resolve
+        self.maybe_swap()
         if not any(r is not None for r in self.active):
             return
         self.policy.tick(self)
@@ -501,10 +643,18 @@ class EngineCore:
         Oversized prompts (see :meth:`admit`) are rejected up front into
         ``self.rejected`` instead of wedging the queue head forever; a
         request that merely lacks resources *now* waits at the queue head
-        for completions to free them."""
+        for completions to free them.  An attached :class:`ManifestWatcher`
+        is polled once per tick (``attach_watcher(poll_every=...)`` thins
+        this): new weights are staged via :meth:`request_reload` and swap in
+        at the drain boundary while the queue keeps feeding."""
         queue = list(requests)
         ticks = 0
         while (queue or any(self.active)) and ticks < max_ticks:
+            if (self._watcher is not None and not self.reload_pending()
+                    and ticks % self._watch_every == 0):
+                got = self._watcher.poll()
+                if got is not None:
+                    self.request_reload(got[1])
             while queue:
                 if not self.fits(queue[0]):
                     req = queue.pop(0)
@@ -517,6 +667,9 @@ class EngineCore:
                 queue.pop(0)
             self.step()
             ticks += 1
+        # a reload staged on the final tick still lands: the next run()
+        # starts on the newest published weights
+        self.maybe_swap()
         return self.done
 
     def reset(self) -> None:
@@ -531,10 +684,51 @@ class EngineCore:
         self.policy.on_reset(self)
 
     def set_params(self, params) -> None:
-        """Hot weight swap; the policy refreshes anything derived from the
-        serving params (the speculative draft projection re-runs here)."""
-        self.params = params
+        """Hot weight swap, IMMEDIATE: in-flight rows decode their next token
+        under the new weights.  The engine re-places the tree onto its device
+        layout and invalidates weight-derived caches (prefix pages), then the
+        policy refreshes anything derived from the serving params (the
+        speculative draft projection re-runs here).  Live serving goes
+        through :meth:`request_reload` instead, which defers this call to a
+        drained tick boundary."""
+        self.params = self._place_params(params)
+        self._on_params_engine()
         self.policy.on_params(self)
+
+    # -- live weight reload ---------------------------------------------------
+    def request_reload(self, params) -> bool:
+        """Stage ``params`` for a tick-boundary swap; True when the engine
+        was already drained and the swap happened immediately.
+
+        In-flight requests finish token-for-token under the weights they
+        started on; new admissions wait (see :meth:`admit`) until the swap,
+        so every request runs under exactly one set of weights and nothing
+        is ever dropped.  Re-staging before the swap lands just replaces the
+        staged tree -- only the newest weights ever swap in."""
+        self._pending_params = params
+        return self.maybe_swap()
+
+    def reload_pending(self) -> bool:
+        return self._pending_params is not None
+
+    def maybe_swap(self) -> bool:
+        """Land a staged reload if the engine is drained; True on swap."""
+        if self._pending_params is None or any(
+                r is not None for r in self.active):
+            return False
+        params, self._pending_params = self._pending_params, None
+        self.set_params(params)
+        self.reloads += 1
+        return True
+
+    def attach_watcher(self, watcher: ManifestWatcher,
+                       poll_every: int = 1) -> None:
+        """Drive ``watcher`` from the scheduler loop: :meth:`run` polls it
+        every ``poll_every`` ticks and stages whatever it lands.  In
+        no-shared-FS KV mode the poll is a collective, so every process of a
+        multi-process serving job must attach with the same cadence."""
+        self._watcher = watcher
+        self._watch_every = max(1, poll_every)
 
     def stats(self) -> Dict[str, Any]:
         return dict(self.policy.stats())
@@ -604,7 +798,8 @@ class PagedServer(EngineCore):
     def __init__(self, cfg, batch: int = 4, max_seq: int = 128,
                  page_size: int = 16, n_pages: Optional[int] = None,
                  prefix_reuse: bool = True,
-                 policy: Optional[DecodePolicy] = None):
+                 policy: Optional[DecodePolicy] = None,
+                 mesh=None, shard_rules: Optional[Dict[str, Any]] = None):
         super().__init__(cfg, batch, max_seq, policy)
         self.page_size = page_size
         self.max_pages_per_req = -(-max_seq // page_size)
@@ -621,6 +816,30 @@ class PagedServer(EngineCore):
         self.alloc = BlockAllocator(n_pages, page_size, prefix_reuse=prefix_reuse)
         self.tables: List[Optional[List[int]]] = [None] * batch
         self.prefill_tokens_computed = 0
+        self.mesh = mesh
+        self._param_shardings = None
+        if mesh is not None:
+            # the serve step becomes the SAME sharded function the decode_*
+            # dry-run cells compile: params on the serve layout, page pools
+            # model-sharded over the kv-head axis (GQA; MLA latent pools
+            # carry no head axis and replicate), tables/tokens/positions
+            # replicated.  Host-side scheduling is unchanged -- only the
+            # compiled step's layout is.
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            from repro.distributed import put_global_tree
+
+            psh, csh, _ = serve_shardings(self.model, mesh, n_pages=n_pages,
+                                          page_size=page_size,
+                                          rules=shard_rules)
+            repl = NamedSharding(mesh, PartitionSpec())
+            self.paged_step = jax.jit(make_paged_decode_step(self.model),
+                                      in_shardings=(psh, csh, repl, repl, repl),
+                                      out_shardings=(repl, csh),
+                                      donate_argnums=(1,))
+            self._param_shardings = psh
+            self.params = put_global_tree(self.params, psh)
+            self.pages = put_global_tree(self.pages, csh)
         self.policy.bind(self)
 
     # -- stats ---------------------------------------------------------------
@@ -723,6 +942,16 @@ class PagedServer(EngineCore):
         self.tables = [None] * self.batch
         self.prefill_tokens_computed = 0
 
+    def _place_params(self, params):
+        if self._param_shardings is None:
+            return params
+        from repro.distributed import put_global_tree
+
+        return put_global_tree(params, self._param_shardings)
+
+    def _on_params_engine(self) -> None:
+        self.alloc.invalidate_prefix()
+
 
 POLICIES = ("greedy", "speculative")
 ENGINES = ("paged", "slots")
@@ -733,7 +962,8 @@ def make_server(cfg, engine: str = "paged", batch: int = 4, max_seq: int = 128,
                 prefix_reuse: bool = True,
                 policy: "str | DecodePolicy" = "greedy",
                 draft_k: int = 4,
-                draft_ml: Optional[MultiLevelConfig] = None):
+                draft_ml: Optional[MultiLevelConfig] = None,
+                mesh=None):
     if isinstance(policy, str):
         if policy == "greedy":
             pol: DecodePolicy = GreedyPolicy()
@@ -748,11 +978,15 @@ def make_server(cfg, engine: str = "paged", batch: int = 4, max_seq: int = 128,
         raise TypeError(f"policy must be one of {POLICIES} or a DecodePolicy "
                         f"instance, got {type(policy).__name__}")
     if engine == "slots":
+        if mesh is not None:
+            raise ValueError("mesh-sharded decode requires the paged engine "
+                             "(--engine paged); the slots oracle stays "
+                             "single-device")
         return Server(cfg, batch=batch, max_seq=max_seq, policy=pol)
     if engine == "paged":
         return PagedServer(cfg, batch=batch, max_seq=max_seq,
                            page_size=page_size, n_pages=n_pages,
-                           prefix_reuse=prefix_reuse, policy=pol)
+                           prefix_reuse=prefix_reuse, policy=pol, mesh=mesh)
     raise ValueError(f"unknown engine {engine!r}; expected one of {ENGINES}")
 
 
@@ -769,13 +1003,39 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--no-prefix-reuse", action="store_true")
+    ap.add_argument("--mesh", default="",
+                    help="DxM ('data','model') serving mesh, e.g. 1x2 -- "
+                         "paged engine only; host CPU devices are forced "
+                         "when the platform has fewer (smoke/tests)")
+    ap.add_argument("--reload-from", default="",
+                    help="checkpoint dir to poll for live weight reloads "
+                         "(a trainer's --ckpt-dir); new steps swap in at "
+                         "tick boundaries without dropping in-flight "
+                         "requests")
+    ap.add_argument("--reload-local", action="store_true",
+                    help="treat --reload-from as a per-host local dir "
+                         "(no shared FS; objects gather over the KV store)")
+    ap.add_argument("--poll-every", type=int, default=1,
+                    help="poll the reload manifest every N scheduler ticks")
     args = ap.parse_args()
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_cli_mesh
+
+        mesh = make_cli_mesh(args.mesh)
     cfg = get_config(args.arch, smoke=args.smoke)
     srv = make_server(cfg, engine=args.engine, batch=args.batch,
                       max_seq=args.max_seq, page_size=args.page_size,
                       prefix_reuse=not args.no_prefix_reuse,
-                      policy=args.policy, draft_k=args.draft_k)
+                      policy=args.policy, draft_k=args.draft_k, mesh=mesh)
+    watcher = None
+    if args.reload_from:
+        mgr = CheckpointManager(args.reload_from, local=args.reload_local)
+        watcher = ManifestWatcher(mgr, like=srv.params,
+                                  shardings=getattr(srv, "_param_shardings",
+                                                    None))
+        srv.attach_watcher(watcher, poll_every=args.poll_every)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12)),
                     max_new=args.max_new) for i in range(args.requests)]
@@ -787,6 +1047,10 @@ def main() -> None:
           f"requests, {tok} tokens in {dt:.1f}s "
           f"({tok/max(dt,1e-9):.1f} tok/s, batch={args.batch})")
     print(f"[serve] {srv.stats()}")
+    if watcher is not None:
+        print(f"[serve] reloads={srv.reloads} steps_seen={watcher.steps_seen} "
+              f"steps_skipped={watcher.steps_skipped} "
+              f"last={watcher.last_reload_stats}")
     for r in done[:3]:
         print(f"  req {r.rid}: prompt[:4]={r.prompt[:4].tolist()} -> out[:8]={r.out[:8]}")
 

@@ -341,6 +341,36 @@ def train_state_specs(model: Model, tc: TrainConfig):
     return ps, adamw_init_specs(ps, tc)
 
 
+def serve_shardings(model: Model, mesh, *, n_pages=None, page_size=None,
+                    rules=None):
+    """(params, page-pool) NamedSharding trees + merged rules for mesh-sharded
+    serving on ``mesh``.
+
+    Layout: the training ``RULES`` overlaid with ``SERVE_RULES`` (read-only
+    params spread over every device, no FSDP/DP gather per step) plus
+    ``cache_kv_heads -> "model"``, so a GQA page pool shards its K/V heads
+    over the model axis while MLA's latent ``ckv``/``kpe`` pools (no head
+    axis) and the block tables stay replicated.  The page-pool tree is None
+    unless ``n_pages``/``page_size`` are given.  The merged rule dict is
+    returned too so callers can enter ``mesh_ctx`` with the identical layout
+    (the serve step is then the same sharded function the ``decode_*``
+    dry-run cells compile).
+    """
+    from repro.distributed import param_shardings
+    from repro.distributed.sharding import RULES, SERVE_RULES
+
+    merged = dict(RULES)
+    merged.update(SERVE_RULES)
+    merged["cache_kv_heads"] = "model"
+    merged.update(rules or {})
+    psh = param_shardings(model.specs(), mesh, merged)
+    csh = None
+    if n_pages is not None:
+        csh = param_shardings(
+            model.paged_cache_specs(n_pages, page_size), mesh, merged)
+    return psh, csh, merged
+
+
 def train_state_shardings(model: Model, tc: TrainConfig, mesh, rules=None,
                           grad_reduce=None):
     """(param, opt) NamedSharding trees for a model's train state on ``mesh``.

@@ -328,3 +328,85 @@ def test_speculative_length_protocol_invariants(data):
     alloc.complete(0)
     assert 0 not in alloc.lengths and 0 not in alloc.written
     assert alloc.pool.n_used == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(data=st.data())
+def test_reload_interleaving_allocator_invariants(data):
+    """Live weight reloads interleaved with admits/ticks/completions at the
+    allocator level: the pool invariants hold after every op, a weight swap's
+    ``invalidate_prefix`` empties the cache WITHOUT touching pages still held
+    by in-flight requests, no admit ever reuses a prefix page written under
+    pre-swap weights (stale K/V), and the speculative draft pool -- sized one
+    worst-case table per row -- never denies an admit the main pool granted."""
+    from repro.launch.paging import BlockAllocator
+
+    P = 4
+    B = data.draw(st.integers(min_value=2, max_value=4), label="batch")
+    MAX_TOTAL = 24
+    max_pages = -(-MAX_TOTAL // P)
+    n_pages = data.draw(st.integers(min_value=8, max_value=32), label="n_pages")
+    alloc = BlockAllocator(n_pages, P, prefix_reuse=True)
+    draft = BlockAllocator(B * max_pages + 1, P, prefix_reuse=False)
+    live, dlive, reserve = {}, {}, {}
+    page_epoch, epoch, rid = {}, 0, 0
+    for _ in range(data.draw(st.integers(min_value=1, max_value=40),
+                             label="n_ops")):
+        op = data.draw(st.sampled_from(["admit", "tick", "complete", "reload"]),
+                       label="op")
+        if op == "admit" and len(live) < B:
+            body = data.draw(st.lists(st.integers(0, 3), min_size=1,
+                                      max_size=10), label="prompt")
+            if data.draw(st.booleans(), label="stem?"):
+                body = [1, 2, 3, 4, 1, 2, 3, 4] + body
+            total = min(len(body) + data.draw(st.integers(1, 8),
+                                              label="max_new"), MAX_TOTAL)
+            if total <= len(body):
+                total = len(body) + 1
+            got = alloc.admit(rid, body, total)
+            if got is not None:
+                table, reuse_len = got
+                n_reused = reuse_len // P
+                for pid in table[:n_reused]:
+                    # a prefix hit must come from pages admitted SINCE the
+                    # last swap: stale K/V from old weights never serves
+                    assert page_epoch[pid] == epoch, \
+                        "stale prefix page reused across a weight swap"
+                for pid in table[n_reused:]:
+                    page_epoch[pid] = epoch
+                live[rid] = table
+                reserve[rid] = total
+                dgot = draft.admit(rid, body, total)
+                assert dgot is not None, \
+                    "draft pool (one worst-case table per row) denied an admit"
+                dlive[rid] = dgot[0]
+            rid += 1
+        elif op == "tick" and live:
+            row = data.draw(st.sampled_from(sorted(live)), label="tick_row")
+            if alloc.lengths[row] < reserve[row]:
+                alloc.advance(row, 1)
+                draft.advance(row, 1)
+        elif op == "complete" and live:
+            victim = data.draw(st.sampled_from(sorted(live)), label="complete")
+            alloc.complete(victim)
+            draft.complete(victim)
+            for d in (live, dlive, reserve):
+                del d[victim]
+        elif op == "reload":
+            # the engine swaps weights: prefix entries derived from the old
+            # weights are dropped; holders keep their pages untouched
+            n_held_before = alloc.pool.n_used
+            alloc.invalidate_prefix()
+            epoch += 1
+            assert len(alloc.prefix) == 0
+            assert alloc.pool.n_used == n_held_before  # in-flight unharmed
+        _allocator_invariants(alloc, live)
+        _allocator_invariants(draft, dlive)
+    assert alloc.invalidations_total == epoch
+    for r in sorted(live):
+        alloc.complete(r)
+        draft.complete(r)
+        del live[r], dlive[r]
+        _allocator_invariants(alloc, live)
+        _allocator_invariants(draft, dlive)
+    assert alloc.pool.n_used == 0 and draft.pool.n_used == 0

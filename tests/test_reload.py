@@ -1,0 +1,326 @@
+"""Live weight reload: the train->serve hand-off.
+
+Pins the two halves of the reload contract:
+
+* **Engine side** (``EngineCore.request_reload`` / ``maybe_swap``): a staged
+  swap defers to a drained tick boundary -- in-flight requests complete
+  token-for-token under the weights they started on, post-swap admissions are
+  stream-identical to a FRESH server booted on the new weights, and nothing
+  is ever dropped.  Holds for both engines, both cache layouts (GQA + MLA),
+  and for the speculative policy, whose coalesced draft must re-project from
+  the swapped params.
+
+* **Watcher side** (``ManifestWatcher``): new checkpoint steps land by
+  per-leaf chunk-digest diff -- unchanged leaves ship zero bytes (pinned by
+  object identity), coalesced mid-V-cycle shapes are skipped, non-v3 layouts
+  fail loudly, and the no-shared-FS KV mode prunes the peer gather to the
+  changed digests.
+
+All comparisons are exact (f32 compute), same discipline as test_serve.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import run_multiprocess, tiny_dense, tiny_mla
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint.manager import _flatten
+from repro.config import MultiLevelConfig
+from repro.core import operators as ops
+from repro.launch.serve import (ManifestWatcher, Request, SpeculativePolicy,
+                                make_server)
+from repro.models.api import build_model
+
+
+# ---------------------------------------------------------------------------
+# engine side: deferred tick-boundary swap
+
+
+def _reqs(cfg, rids, seed, max_new=4):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=r, prompt=rng.integers(0, cfg.vocab_size,
+                                               size=int(rng.integers(5, 12))),
+                    max_new=max_new) for r in rids]
+
+
+def _stream(srv, reqs):
+    return {r.rid: r.out for r in srv.run(reqs)}
+
+
+@pytest.mark.parametrize("cfg_fn", [tiny_dense, tiny_mla],
+                         ids=["gqa", "mla"])
+@pytest.mark.parametrize("engine", ["slots", "paged"])
+def test_reload_equivalence(engine, cfg_fn):
+    """The reload contract, both engines x both cache layouts: in-flight
+    requests finish under the OLD weights, post-swap admissions match a fresh
+    server on the NEW weights, admission is gated while a swap is staged, and
+    the paged prefix cache is invalidated on swap."""
+    cfg = cfg_fn(compute_dtype="float32")
+    kw = dict(engine=engine, batch=2, max_seq=48, page_size=8)
+    p_new = build_model(cfg).init(jax.random.PRNGKey(42))
+
+    old_oracle = _stream(make_server(cfg, **kw), _reqs(cfg, [0, 1], seed=7))
+    new_srv = make_server(cfg, **kw)
+    new_srv.set_params(p_new)
+    new_oracle = _stream(new_srv, _reqs(cfg, [10, 11], seed=8))
+
+    srv = make_server(cfg, **kw)
+    for r in _reqs(cfg, [0, 1], seed=7):
+        assert srv.admit(r)
+    srv.step()  # both rows mid-flight
+    assert not srv.request_reload(p_new)  # rows active -> staged, not swapped
+    assert srv.reload_pending()
+    # admission is gated: a request admitted now would run on OLD weights
+    assert not srv.admit(_reqs(cfg, [50], seed=9)[0])
+    while any(r is not None for r in srv.active):
+        srv.step()
+    assert srv.reloads == 0  # drain alone does not swap mid-list
+    srv.step()  # first drained tick boundary lands the swap
+    assert srv.reloads == 1 and not srv.reload_pending()
+    if engine == "paged":
+        assert srv.alloc.invalidations_total == 1  # old-weight prefixes gone
+
+    # in-flight requests completed token-for-token under the old weights
+    assert {r.rid: r.out for r in srv.done} == old_oracle
+    # post-swap admissions are stream-identical to the fresh-on-new oracle
+    done = _stream(srv, _reqs(cfg, [10, 11], seed=8))
+    assert {k: v for k, v in done.items() if k >= 10} == new_oracle
+
+
+def test_reload_immediate_when_drained():
+    """request_reload on an idle engine swaps synchronously (True) -- the
+    startup path: attach a watcher, land the first checkpoint, serve."""
+    cfg = tiny_dense(compute_dtype="float32")
+    srv = make_server(cfg, engine="paged", batch=2, max_seq=32, page_size=8)
+    p_new = build_model(cfg).init(jax.random.PRNGKey(1))
+    assert srv.request_reload(p_new)
+    assert srv.reloads == 1 and not srv.reload_pending()
+    fresh = make_server(cfg, engine="paged", batch=2, max_seq=32, page_size=8)
+    fresh.set_params(p_new)
+    assert _stream(srv, _reqs(cfg, [0, 1], seed=3)) \
+        == _stream(fresh, _reqs(cfg, [0, 1], seed=3))
+
+
+def test_reload_restaging_keeps_newest():
+    """Re-staging before the swap lands replaces the staged tree: only the
+    NEWEST published weights ever swap in (a slow drain must not serve a
+    checkpoint the trainer already superseded)."""
+    cfg = tiny_dense(compute_dtype="float32")
+    srv = make_server(cfg, engine="paged", batch=2, max_seq=32, page_size=8)
+    p1 = build_model(cfg).init(jax.random.PRNGKey(1))
+    p2 = build_model(cfg).init(jax.random.PRNGKey(2))
+    assert srv.admit(_reqs(cfg, [0], seed=4)[0])
+    assert not srv.request_reload(p1)
+    assert not srv.request_reload(p2)  # supersedes p1 while still staged
+    srv.run([])  # drain; trailing maybe_swap lands the staged tree
+    assert srv.reloads == 1
+    leaf = lambda t: jax.tree.leaves(t)[0]
+    np.testing.assert_array_equal(np.asarray(leaf(srv.params)),
+                                  np.asarray(leaf(p2)))
+
+
+def test_reload_speculative_reprojects_draft():
+    """Speculative serving across a reload: the coalesced draft is a pure
+    function of the serving params, so the swap must re-project it
+    (``SpeculativePolicy.on_params``).  Swapping in width-consistent weights
+    proves it end-to-end: the post-swap accept rate is near-1 (a stale draft
+    would sit at chance, ~1/vocab) and the stream still matches greedy."""
+    cfg = tiny_dense(compute_dtype="float32", qk_norm=False,
+                     tie_embeddings=False)
+    ml = MultiLevelConfig()
+    model = build_model(cfg)
+    small_cfg = ops.coalesce_config(cfg, ml, width=True, depth=False)
+    p_new = ops.make_decoalesce_fn(model.specs(), cfg, ml,
+                                   width=True, depth=False)(
+        build_model(small_cfg).init(jax.random.PRNGKey(3)))
+
+    kw = dict(batch=2, max_seq=48, page_size=8)
+    gsrv = make_server(cfg, engine="paged", **kw)
+    gsrv.set_params(p_new)
+    greedy = _stream(gsrv, _reqs(cfg, [10, 11], seed=8, max_new=8))
+
+    pol = SpeculativePolicy(k=4, ml=ml, draft_width=True, draft_depth=False)
+    srv = make_server(cfg, engine="paged", policy=pol, **kw)
+    srv.run(_reqs(cfg, [0, 1], seed=7))  # serve a round on the init weights
+    assert srv.request_reload(p_new)  # drained -> swaps and re-projects
+
+    # the draft IS coalesce(new serving params), not a stale projection
+    want = _flatten(pol._project(srv.params))
+    got = _flatten(pol.draft_params)
+    assert got.keys() == want.keys()
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(want[k]), err_msg=k)
+
+    pol._zero_stats()  # measure acceptance on the post-swap traffic only
+    done = _stream(srv, _reqs(cfg, [10, 11], seed=8, max_new=8))
+    assert {k: v for k, v in done.items() if k >= 10} == greedy
+    assert srv.stats()["accept_rate"] > 0.9
+
+
+# ---------------------------------------------------------------------------
+# watcher side: digest-diff landing
+
+
+def _params_and_watcher(tmp_path, cfg):
+    p = build_model(cfg).init(jax.random.PRNGKey(0))
+    p = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), p)
+    mgr = CheckpointManager(str(tmp_path))
+    like = jax.tree.map(jnp.zeros_like, p)
+    return p, mgr, ManifestWatcher(mgr, like=like)
+
+
+def test_watcher_diff_ships_zero_bytes_for_unchanged_leaves(tmp_path):
+    """Second poll after a ONE-leaf change: exactly one leaf is re-assembled
+    and the other landed leaves are the SAME objects as the first poll --
+    unchanged weights never leave the store."""
+    cfg = tiny_dense()
+    p1, mgr, w = _params_and_watcher(tmp_path, cfg)
+    mgr.save(1, {"params": p1}, meta={"step": 1})
+    step, landed1 = w.poll()
+    assert step == 1 and w.last_step == 1
+    flat1 = _flatten(landed1)
+    st1 = w.last_reload_stats
+    assert st1["changed"] == len(flat1) and st1["reused"] == 0
+
+    # change exactly one leaf and publish step 2
+    leaves = jax.tree.leaves(p1)
+    p2 = jax.tree.unflatten(jax.tree.structure(p1),
+                            [leaves[0] * 2.0 + 1.0] + leaves[1:])
+    mgr.save(2, {"params": p2}, meta={"step": 2})
+    assert w.poll()[0] == 2
+    st2 = w.last_reload_stats
+    assert st2["changed"] == 1 and st2["reused"] == len(flat1) - 1
+    # the diff pruned the gather: fewer digests read than the manifest holds
+    assert st2["gather_needed"] < st2["gather_manifest"]
+    assert st2["gather_skipped"] > 0
+
+    same = sum(1 for k in flat1 if w._landed[k] is flat1[k])
+    assert same == st2["reused"]  # unchanged leaves: identical objects
+    assert w.steps_seen == [1, 2] and w.steps_skipped == []
+
+
+def test_watcher_stale_and_missing_manifest(tmp_path):
+    """No manifest -> None; an already-seen step -> None (poll is cheap in
+    the steady state: one manifest read, no assembly)."""
+    cfg = tiny_dense()
+    p1, mgr, w = _params_and_watcher(tmp_path, cfg)
+    assert w.poll() is None and w.poll_errors == 0
+    mgr.save(1, {"params": p1}, meta={"step": 1})
+    assert w.poll() is not None
+    assert w.poll() is None  # same step again: nothing to do
+    assert w.steps_seen == [1]
+
+
+def test_watcher_skips_coalesced_checkpoints(tmp_path):
+    """A mid-V-cycle publish carries COALESCED (smaller-shape) params; the
+    watcher must skip it -- remembering it as examined so the poll stays
+    cheap -- and land the next level-0-shaped step."""
+    cfg = tiny_dense(compute_dtype="float32")
+    ml = MultiLevelConfig()
+    p1, mgr, w = _params_and_watcher(tmp_path, cfg)
+    mgr.save(1, {"params": p1}, meta={"step": 1})
+    assert w.poll()[0] == 1
+
+    small_cfg = ops.coalesce_config(cfg, ml, width=True, depth=True)
+    p_small = build_model(small_cfg).init(jax.random.PRNGKey(1))
+    mgr.save(2, {"params": p_small}, meta={"step": 2})
+    assert w.poll() is None
+    assert w.steps_skipped == [2] and w.last_step == 1
+    assert w.poll() is None  # the skip is remembered, not re-examined
+
+    mgr.save(3, {"params": p1}, meta={"step": 3})
+    assert w.poll()[0] == 3
+    assert w.steps_seen == [1, 3]
+
+
+def test_watcher_rejects_non_v3_layout(tmp_path):
+    """dedup=False writes the whole-file v2 layout -- no digest manifest to
+    diff.  The watcher must fail loudly, not serve garbage."""
+    cfg = tiny_dense()
+    p = build_model(cfg).init(jax.random.PRNGKey(0))
+    CheckpointManager(str(tmp_path), dedup=False).save(
+        1, {"params": p}, meta={"step": 1})
+    w = ManifestWatcher(CheckpointManager(str(tmp_path), dedup=False),
+                        like=jax.tree.map(jnp.zeros_like, p))
+    with pytest.raises(ValueError, match="content-addressed"):
+        w.poll()
+
+
+def test_attached_watcher_swaps_during_run(tmp_path):
+    """End-to-end through ``run()``: a server with an attached watcher picks
+    up a published step at the tick boundary and the whole stream equals a
+    fresh server booted on the published weights."""
+    cfg = tiny_dense(compute_dtype="float32")
+    p1, mgr, w = _params_and_watcher(tmp_path, cfg)
+    mgr.save(1, {"params": p1}, meta={"step": 1})
+
+    fresh = make_server(cfg, engine="paged", batch=2, max_seq=48, page_size=8)
+    fresh.set_params(p1)
+    oracle = _stream(fresh, _reqs(cfg, [0, 1, 2], seed=5))
+
+    srv = make_server(cfg, engine="paged", batch=2, max_seq=48, page_size=8)
+    srv.attach_watcher(w)
+    assert _stream(srv, _reqs(cfg, [0, 1, 2], seed=5)) == oracle
+    assert srv.reloads == 1 and srv.rejected == []
+    assert w.steps_seen == [1]
+
+
+@pytest.mark.slow
+def test_watcher_two_process_kv_mode(tmp_path):
+    """No-shared-FS serving (--ckpt-local-dir): rank 0 polls from an EMPTY
+    local dir, so every object of the first landed step crosses the
+    coordination KV from rank 1's pool; a one-leaf coordinated update then
+    lands with the gather pruned to the changed digests."""
+    cfg = tiny_dense()
+    p1 = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32),
+                      build_model(cfg).init(jax.random.PRNGKey(0)))
+    survivor = str(tmp_path / "survivor")
+    CheckpointManager(survivor, local=True).save(
+        1, {"params": p1}, meta={"step": 1})
+
+    res = run_multiprocess("""
+        import os
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from helpers import tiny_dense
+        from repro.checkpoint import CheckpointManager
+        from repro.checkpoint.manager import _flatten
+        from repro.launch.serve import ManifestWatcher
+        from repro.models.api import build_model
+
+        cfg = tiny_dense()
+        p1 = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32),
+                          build_model(cfg).init(jax.random.PRNGKey(0)))
+        my_dir = (os.environ["FRESH"] if jax.process_index() == 0
+                  else os.environ["SURVIVOR"])
+        mgr = CheckpointManager(my_dir, local=True)
+        w = ManifestWatcher(mgr, like=jax.tree.map(jnp.zeros_like, p1))
+        step, landed = w.poll()  # collective: election + KV gather
+        assert step == 1, step
+        flat, ref = _flatten(landed), _flatten(p1)
+        for k in ref:
+            np.testing.assert_array_equal(np.asarray(flat[k]),
+                                          np.asarray(ref[k]), err_msg=k)
+        st1 = w.last_reload_stats
+        if jax.process_index() == 0:
+            assert st1["gather_fetched"] > 0, st1  # all over the wire
+        else:
+            assert st1["gather_served"] > 0, st1  # rank 1 fed the KV
+
+        leaves = jax.tree.leaves(p1)
+        p2 = jax.tree.unflatten(jax.tree.structure(p1),
+                                [leaves[0] * 2.0 + 1.0] + leaves[1:])
+        mgr.save(2, {"params": p2}, meta={"step": 2})  # coordinated save
+        assert w.poll()[0] == 2
+        st = w.last_reload_stats
+        assert st["changed"] == 1 and st["reused"] == st["leaves"] - 1, st
+        assert st["gather_needed"] < st["gather_manifest"], st
+        print(f"MP_WATCHER_OK rank={jax.process_index()} "
+              f"fetched1={st1['gather_fetched']} "
+              f"needed2={st['gather_needed']}", flush=True)
+    """, n=2, env={"FRESH": str(tmp_path / "fresh"), "SURVIVOR": survivor})
+    for rc, out in res:
+        assert rc == 0, out[-3000:]
+        assert "MP_WATCHER_OK" in out

@@ -9,7 +9,17 @@ The decode-policy suite at the bottom pins the speculative contract: the
 coalesced level-1 draft may be arbitrarily wrong (random weights, or a
 sabotaged draft that disagrees on the first token of every round) and the
 emitted stream must STILL be token-for-token identical to greedy decode,
-with rejected positions rewound through the allocator's rollback protocol."""
+with rejected positions rewound through the allocator's rollback protocol.
+
+The mesh-sharded smoke at the bottom runs in a subprocess (2 forced host
+devices): --mesh 1x2 paged decode must emit the unsharded engine's exact
+stream, with the K/V page pools genuinely model-sharded, across a hot weight
+swap."""
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import numpy as np
 import pytest
@@ -369,3 +379,75 @@ def test_speculative_reset_and_reuse():
     assert srv.stats()["spec_rounds"] == 0  # policy stats cleared too
     again = srv.run([Request(rid=1, prompt=np.arange(6, dtype=np.int64), max_new=3)])
     assert again[0].out == out0
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded paged decode
+
+
+def test_make_server_rejects_mesh_on_slots_engine():
+    cfg = tiny_dense(compute_dtype="float32")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="paged engine"):
+        make_server(cfg, engine="slots", mesh=mesh)
+
+
+@pytest.mark.slow
+def test_mesh_sharded_paged_decode_matches_unsharded():
+    """--mesh 1x2 smoke: the model-sharded paged decode step emits the
+    unsharded engine's EXACT greedy stream (f32), the K/V page pools really
+    are sharded over the "model" axis (not silently replicated), and a hot
+    weight swap on the mesh server stays stream-identical.  Runs in a
+    subprocess with 2 forced host devices (this process must keep its single
+    real CPU device)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import jax
+        import numpy as np
+        from helpers import tiny_dense
+        from repro.launch.serve import Request, make_server
+        from repro.models.api import build_model
+
+        cfg = tiny_dense(compute_dtype="float32")
+        rng = np.random.default_rng(1)
+        shared = rng.integers(0, cfg.vocab_size, size=16)
+        prompts = [rng.integers(0, cfg.vocab_size, size=int(n))
+                   for n in rng.integers(4, 14, size=4)]
+        prompts += [np.concatenate([shared,
+                                    rng.integers(0, cfg.vocab_size, size=3 + i)])
+                    for i in range(2)]
+        reqs = lambda base: [Request(rid=base + i, prompt=p, max_new=6)
+                             for i, p in enumerate(prompts)]
+
+        kw = dict(engine="paged", batch=3, max_seq=48, page_size=8)
+        ref = make_server(cfg, **kw)
+        mesh = jax.make_mesh((1, 2), ("data", "model"))
+        srv = make_server(cfg, mesh=mesh, **kw)
+
+        # the page pools are genuinely model-sharded, not replicated
+        specs = {str(leaf.sharding.spec) for leaf in jax.tree.leaves(srv.pages)}
+        assert any("model" in s for s in specs), specs
+
+        a = {r.rid: r.out for r in ref.run(reqs(0))}
+        b = {r.rid: r.out for r in srv.run(reqs(0))}
+        assert a == b, "sharded decode diverged from unsharded"
+
+        # hot weight swap on the mesh server: still stream-identical
+        p_new = build_model(cfg).init(jax.random.PRNGKey(42))
+        ref.set_params(p_new)
+        srv.set_params(p_new)
+        a2 = {r.rid: r.out for r in ref.run(reqs(100))}
+        b2 = {r.rid: r.out for r in srv.run(reqs(100))}
+        assert {k: v for k, v in a2.items() if k >= 100} \\
+            == {k: v for k, v in b2.items() if k >= 100}
+        assert srv.params is not p_new  # re-placed onto the mesh sharding
+        print("SHARDED_SERVE_OK")
+    """)
+    env = dict(os.environ, PYTHONPATH="src" + os.pathsep + "tests")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARDED_SERVE_OK" in out.stdout

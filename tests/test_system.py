@@ -312,3 +312,76 @@ def test_vcycle_launcher_sigkill_resume(tmp_path):
                        timeout=300)
     assert r.returncode == 0, r.stderr[-1500:]
     assert "resumed at phase=" in r.stdout, r.stdout[-1500:]
+
+
+@pytest.mark.slow
+def test_serve_soak_live_trainer_reloads(tmp_path):
+    """The train->serve soak drill: a REAL ``python -m repro.launch.train
+    --vcycle`` run publishes a checkpoint every 2 global steps while an
+    in-process paged server with an attached ManifestWatcher serves
+    continuous traffic from the same directory.  The server must swap
+    multiple published steps in publish order, skip any coalesced
+    mid-V-cycle publishes it examines, drop zero requests (every request
+    completes its full token budget), and land reloads by digest diff
+    (``last_gather_stats`` shows pruned transfers)."""
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_config
+    from repro.launch.serve import ManifestWatcher, Request, make_server
+
+    ckpt = str(tmp_path / "ckpt")
+    env = dict(os.environ, PYTHONPATH="src")
+    root = os.path.join(os.path.dirname(__file__), "..")
+    args = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "tinyllama-1.1b", "--smoke", "--vcycle", "--levels", "2",
+            "--steps", "24", "--batch", "2", "--seq", "16",
+            "--ckpt-dir", ckpt, "--ckpt-every", "2"]
+
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    srv = make_server(cfg, engine="paged", batch=3, max_seq=48, page_size=8)
+    watcher = ManifestWatcher(CheckpointManager(ckpt), like=srv.params)
+    srv.attach_watcher(watcher)
+
+    rng = np.random.default_rng(0)
+    rid = 0
+
+    def wave():
+        nonlocal rid
+        reqs = [Request(rid=rid + i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            size=int(rng.integers(4, 12))),
+                        max_new=4) for i in range(3)]
+        rid += 3
+        srv.run(reqs)
+
+    log = str(tmp_path / "train.log")
+    with open(log, "w") as lf:
+        trainer = subprocess.Popen(args, env=env, cwd=root, stdout=lf,
+                                   stderr=subprocess.STDOUT)
+        try:
+            deadline = time.time() + 600
+            while trainer.poll() is None and time.time() < deadline:
+                wave()  # continuous traffic while the trainer publishes
+        finally:
+            if trainer.poll() is None:
+                trainer.kill()
+        assert trainer.wait(timeout=60) == 0, open(log).read()[-1500:]
+    wave()  # one more wave to land the trainer's terminal save
+
+    # zero dropped requests: everything admitted, everything completed full
+    assert srv.rejected == []
+    assert len(srv.done) == rid
+    assert all(len(r.out) == 4 for r in srv.done)
+
+    # the server really followed the trainer: >= 2 live swaps, publish order
+    assert srv.reloads == len(watcher.steps_seen), \
+        (srv.reloads, watcher.steps_seen)
+    assert len(watcher.steps_seen) >= 2, watcher.steps_seen
+    assert watcher.steps_seen == sorted(set(watcher.steps_seen)), \
+        "manifest steps landed out of order"
+    # skipped (coalesced-shape) steps never served, never landed
+    assert not set(watcher.steps_skipped) & set(watcher.steps_seen)
+    # digest-diff transfers: the gathers were pruned to the needed digests
+    assert any(r["gather_skipped"] > 0 for r in watcher.reload_history), \
+        watcher.reload_history
+    assert watcher.poll_errors == 0 or watcher.steps_seen, \
+        "poll errors without a single landed step"
